@@ -1,0 +1,42 @@
+"""Fig. 3 / Thm 3: test accuracy of one-layer GraphSAGE (MSE) across batch
+sizes and fan-out sizes (products-like + reddit-like presets).
+
+Validates Remark 4.1 (larger b or β -> better generalization, with
+possible degradation at the extremes) and Obs.2 (β moves accuracy more
+than b)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gnn_cfg, print_rows, run_minibatch, \
+    summarize, write_csv
+from repro.data import make_preset
+
+
+def run(quick: bool = True, seed: int = 0):
+    rows = []
+    iters = 150 if quick else 400
+    for preset in ("products-like", "reddit-like"):
+        graph = make_preset(preset, seed=seed, n=1600 if quick else 4000,
+                            homophily=0.6, feat_scale=0.35, train_frac=0.3)
+        for loss in ("mse", "ce"):
+            cfg = gnn_cfg(graph, n_layers=1, loss=loss)
+            for b in [32, 128, 512, len(graph.train_nodes)]:
+                res, _ = run_minibatch(graph, cfg, b, (10,), iters,
+                                       seed=seed)
+                rows.append({"preset": preset, "loss": loss,
+                             "sweep": "batch", "b": b, "beta": 10,
+                             **summarize(res)})
+            for beta in [1, 2, 5, 10, min(25, graph.d_max)]:
+                res, _ = run_minibatch(graph, cfg, 128, (beta,), iters,
+                                       seed=seed)
+                rows.append({"preset": preset, "loss": loss,
+                             "sweep": "fanout", "b": 128, "beta": beta,
+                             **summarize(res)})
+    write_csv("fig3_generalization", rows)
+    print_rows("fig3", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

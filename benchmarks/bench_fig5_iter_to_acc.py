@@ -1,0 +1,36 @@
+"""Fig. 5 / §5.1: iteration-to-accuracy vs time-to-accuracy across batch
+and fan-out sizes (reddit-like preset) — the paper's hardware-agnostic
+metric argument."""
+from __future__ import annotations
+
+from benchmarks.common import gnn_cfg, print_rows, run_minibatch, \
+    summarize, write_csv
+from repro.data import make_preset
+
+
+def run(quick: bool = True, seed: int = 0):
+    graph = make_preset("reddit-like", seed=seed, n=1600 if quick else 4000,
+                        homophily=0.6, feat_scale=0.35, train_frac=0.3)
+    iters = 150 if quick else 400
+    target_acc = 0.72
+    rows = []
+    for loss in ("ce", "mse"):
+        cfg = gnn_cfg(graph, n_layers=1, loss=loss)
+        for b in [32, 128, 512]:
+            res, _ = run_minibatch(graph, cfg, b, (10,), iters, seed=seed,
+                                   eval_every=1)
+            rows.append({"loss": loss, "sweep": "batch", "b": b, "beta": 10,
+                         **summarize(res, target_acc=target_acc)})
+        for beta in [2, 5, 15]:
+            res, _ = run_minibatch(graph, cfg, 128, (beta,), iters,
+                                   seed=seed, eval_every=1)
+            rows.append({"loss": loss, "sweep": "fanout", "b": 128,
+                         "beta": beta,
+                         **summarize(res, target_acc=target_acc)})
+    write_csv("fig5_iter_to_acc", rows)
+    print_rows("fig5", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

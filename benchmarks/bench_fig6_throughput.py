@@ -1,0 +1,38 @@
+"""Fig. 6(c,d) / §5.4: training throughput (target nodes/s) across batch
+and fan-out sizes — computational-efficiency claims: throughput rises
+with b, falls with β; mini-batch beats full-graph per-node."""
+from __future__ import annotations
+
+from benchmarks.common import gnn_cfg, print_rows, run_fullgraph, \
+    run_minibatch, summarize, write_csv
+from repro.data import make_preset
+
+
+def run(quick: bool = True, seed: int = 0):
+    graph = make_preset("products-like", seed=seed,
+                        n=1600 if quick else 4000)
+    iters = 60 if quick else 150
+    rows = []
+    cfg = gnn_cfg(graph, n_layers=1, loss="ce")
+    for b in [32, 128, 512, len(graph.train_nodes)]:
+        res, wall = run_minibatch(graph, cfg, b, (10,), iters, seed=seed,
+                                  eval_every=10 ** 9)
+        rows.append({"sweep": "batch", "b": b, "beta": 10,
+                     **summarize(res), "wall_s": round(wall, 2)})
+    for beta in [2, 5, 10, 20]:
+        res, wall = run_minibatch(graph, cfg, 128, (beta,), iters,
+                                  seed=seed, eval_every=10 ** 9)
+        rows.append({"sweep": "fanout", "b": 128, "beta": beta,
+                     **summarize(res), "wall_s": round(wall, 2)})
+    res, wall = run_fullgraph(graph, cfg, iters, seed=seed,
+                              eval_every=10 ** 9)
+    rows.append({"sweep": "fullgraph", "b": len(graph.train_nodes),
+                 "beta": graph.d_max, **summarize(res),
+                 "wall_s": round(wall, 2)})
+    write_csv("fig6_throughput", rows)
+    print_rows("fig6", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Neighbor-aggregation kernel micro-bench: jnp oracle vs Pallas
+(interpret mode on CPU — correctness + working-set accounting; wall time
+is NOT a TPU number, the derived bytes/flops are hardware-independent)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_rows, write_csv
+from repro.kernels.neighbor_agg.ops import neighbor_agg
+
+
+def run(quick: bool = True, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    cases = [(4096, 128, 256, 15), (16384, 256, 512, 10)]
+    if quick:
+        cases = [(1024, 128, 64, 15)]
+    for n, d, b, k in cases:
+        feats = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        idx = jnp.asarray(rng.integers(0, n, (b, k)), jnp.int32)
+        w = jnp.asarray(rng.random((b, k)), jnp.float32)
+        ref = neighbor_agg(feats, idx, w, use_kernel=False)
+        ref.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            neighbor_agg(feats, idx, w, use_kernel=False).block_until_ready()
+        t_ref = (time.perf_counter() - t0) / 3
+        ker = neighbor_agg(feats, idx, w, use_kernel=True, interpret=True)
+        err = float(jnp.max(jnp.abs(ref - ker)))
+        flops = 2.0 * b * k * d
+        bytes_moved = (b * k * (d * 4 + 4 + 4) + b * d * 4)
+        rows.append({
+            "n": n, "d": d, "b": b, "k": k,
+            "jnp_us_per_call": round(t_ref * 1e6, 1),
+            "kernel_max_err": err,
+            "flops": int(flops),
+            "bytes_moved": int(bytes_moved),
+            "arithmetic_intensity": round(flops / bytes_moved, 3),
+            "v5e_hbm_bound_us": round(bytes_moved / 819e9 * 1e6, 3),
+        })
+    write_csv("kernel_microbench", rows)
+    print_rows("kernel", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

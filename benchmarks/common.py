@@ -1,0 +1,84 @@
+"""Shared benchmark utilities: runs, sweeps, CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.metrics import (History, iteration_to_accuracy,
+                                iteration_to_loss, throughput_nodes_per_sec,
+                                time_to_accuracy)
+from repro.core.trainer import train_full_graph, train_minibatch
+from repro.data import make_preset
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+# tuned learning rates per loss (the paper tunes lr per setting; App. N)
+LR = {"ce": 0.3, "mse": 0.05}
+
+
+def gnn_cfg(graph, model="graphsage", n_layers=1, loss="ce",
+            fanout=(10,), batch=256, hidden=64) -> GNNConfig:
+    return GNNConfig(name="bench", model=model, n_nodes=graph.n,
+                     feat_dim=graph.feats.shape[1], hidden=hidden,
+                     n_classes=graph.n_classes, n_layers=n_layers,
+                     fanout=tuple(fanout), batch_size=batch, loss=loss)
+
+
+def run_minibatch(graph, cfg, b, fanouts, iters, seed=0, eval_every=10):
+    t0 = time.perf_counter()
+    res = train_minibatch(graph, cfg, lr=LR[cfg.loss], n_iters=iters,
+                          batch_size=b, fanouts=fanouts, seed=seed,
+                          eval_every=eval_every)
+    return res, time.perf_counter() - t0
+
+
+def run_fullgraph(graph, cfg, iters, seed=0, eval_every=10):
+    t0 = time.perf_counter()
+    res = train_full_graph(graph, cfg, lr=LR[cfg.loss], n_iters=iters,
+                           seed=seed, eval_every=eval_every)
+    return res, time.perf_counter() - t0
+
+
+def summarize(res: "TrainResult", target_loss: Optional[float] = None,
+              target_acc: Optional[float] = None) -> Dict:
+    h = res.history
+    out = {
+        "first_loss": round(h.losses[0], 4),
+        "final_loss": round(h.losses[-1], 4),
+        "test_acc": round(res.final_test_acc, 4),
+        "iters": len(h.losses),
+    }
+    if target_loss is not None:
+        out["iter_to_loss"] = iteration_to_loss(h, target_loss)
+    if target_acc is not None:
+        out["iter_to_acc"] = iteration_to_accuracy(h, target_acc)
+        out["time_to_acc"] = time_to_accuracy(h, target_acc)
+    out["throughput_nodes_s"] = round(throughput_nodes_per_sec(h), 1)
+    return out
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if rows:
+        keys: List[str] = []
+        for r in rows:
+            for k in r:
+                if k not in keys:
+                    keys.append(k)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def print_rows(name: str, rows: Sequence[Dict]):
+    for r in rows:
+        kv = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{kv}", flush=True)

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run            # quick defaults
+    PYTHONPATH=src python -m benchmarks.run --full
+    PYTHONPATH=src python -m benchmarks.run --only fig2,table1
+
+CSV outputs land in experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = [
+    ("fig1_metric_stability", "benchmarks.bench_fig1_metric_stability"),
+    ("fig2_convergence", "benchmarks.bench_fig2_convergence"),
+    ("fig3_generalization", "benchmarks.bench_fig3_generalization"),
+    ("fig4_multilayer", "benchmarks.bench_fig4_multilayer"),
+    ("fig5_iter_to_acc", "benchmarks.bench_fig5_iter_to_acc"),
+    ("fig6_throughput", "benchmarks.bench_fig6_throughput"),
+    ("table1_tuned", "benchmarks.bench_table1_tuned"),
+    ("thm3_wasserstein", "benchmarks.bench_thm3_wasserstein"),
+    ("theory_slopes", "benchmarks.bench_theory_slopes"),
+    ("kernel_microbench", "benchmarks.bench_kernel"),
+    ("roofline_report", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    results = {}
+    for name, mod_name in BENCHES:
+        if only and not any(s in name for s in only):
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            rows = mod.run(quick=not args.full)
+            results[name] = ("ok", len(rows), time.time() - t0)
+        except Exception as e:  # noqa
+            traceback.print_exc()
+            results[name] = ("error", str(e)[:100], time.time() - t0)
+        print(f"== {name}: {results[name]}", flush=True)
+
+    print("\n=== benchmark summary ===")
+    for name, r in results.items():
+        print(f"{name:24s} {r}")
+    if any(r[0] == "error" for r in results.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""LM pretraining example: reduced-config training via the production
+launcher (AdamW, remat, checkpointing).  Any of the 10 assigned archs:
+
+    PYTHONPATH=src python examples/lm_pretrain_smoke.py --arch zamba2-7b
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    sys.argv = ["train", "--arch", args.arch, "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "128"]
+    train_main()
+
+
+if __name__ == "__main__":
+    main()

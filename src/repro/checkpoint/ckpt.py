@@ -1,0 +1,95 @@
+"""Flat-npz pytree checkpointing with step management and atomic writes.
+
+Leaves are addressed by their tree path ("runs/0/attn/wq", ...), so a
+checkpoint is restorable into any pytree with the same structure — and is
+readable with plain numpy for inspection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+
+    def name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[name(path)] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)                     # atomic
+    if metadata is not None:
+        with open(os.path.join(directory, f"meta_{step:08d}.json"),
+                  "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any,
+                       step: Optional[int] = None) -> Any:
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat_like = _flatten_paths(like)
+    leaves = []
+    for name, leaf in flat_like:
+        arr = data[name]
+        assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _flatten_paths(tree: Any):
+    out = []
+
+    def name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append((name(path), leaf))
+    return out

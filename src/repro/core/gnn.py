@@ -1,0 +1,202 @@
+"""GCN / GraphSAGE(mean) / GAT — the paper's three models (§5), each with
+a full-graph (ELL) and a mini-batch (fan-out tree) forward path sharing
+the same parameters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def layer_dims(cfg: GNNConfig, feat_dim: int) -> List[tuple]:
+    dims = []
+    d_in = feat_dim
+    for l in range(cfg.n_layers):
+        d_out = cfg.n_classes if l == cfg.n_layers - 1 else cfg.hidden
+        dims.append((d_in, d_out))
+        d_in = d_out
+    return dims
+
+
+def init_gnn(key, cfg: GNNConfig, feat_dim: int) -> List[Dict[str, Any]]:
+    params = []
+    for li, (d_in, d_out) in enumerate(layer_dims(cfg, feat_dim)):
+        k = jax.random.fold_in(key, li)
+        sc = 1.0 / math.sqrt(d_in)
+        if cfg.model == "gcn":
+            p = {"w": sc * jax.random.normal(k, (d_in, d_out), F32)}
+        elif cfg.model == "graphsage":
+            k1, k2 = jax.random.split(k)
+            p = {"w_self": sc * jax.random.normal(k1, (d_in, d_out), F32),
+                 "w_neigh": sc * jax.random.normal(k2, (d_in, d_out), F32)}
+        else:  # gat
+            h = cfg.gat_heads
+            last = li == cfg.n_layers - 1
+            # hidden layers concat heads (dh = d_out/h); the last layer
+            # emits full class logits per head and averages them.
+            dh = d_out if last else max(d_out // h, 1)
+            k1, k2, k3 = jax.random.split(k, 3)
+            p = {"w": sc * jax.random.normal(k1, (d_in, h, dh), F32),
+                 "a_src": 0.1 * jax.random.normal(k2, (h, dh), F32),
+                 "a_dst": 0.1 * jax.random.normal(k3, (h, dh), F32)}
+        params.append(p)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer primitives (shared by both paths)
+# ---------------------------------------------------------------------------
+
+def _gcn_layer(p, h_self, h_nb, w_edge, w_self):
+    """h_self [..., d]; h_nb [..., K, d]; w_edge [..., K]; w_self [...]."""
+    agg = jnp.einsum("...k,...kd->...d", w_edge, h_nb) \
+        + w_self[..., None] * h_self
+    return agg @ p["w"]
+
+
+def _sage_layer(p, h_self, h_nb, mask):
+    cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+    mean = jnp.einsum("...k,...kd->...d", mask, h_nb) / cnt
+    return h_self @ p["w_self"] + mean @ p["w_neigh"]
+
+
+def _gat_layer(p, h_self, h_nb, mask):
+    z_s = jnp.einsum("...d,dhe->...he", h_self, p["w"])        # [..., H, dh]
+    z_n = jnp.einsum("...kd,dhe->...khe", h_nb, p["w"])        # [..., K, H, dh]
+    e_s = jnp.einsum("...he,he->...h", z_s, p["a_src"])        # [..., H]
+    e_n = jnp.einsum("...khe,he->...kh", z_n, p["a_dst"])      # [..., K, H]
+    e = jax.nn.leaky_relu(e_s[..., None, :] + e_n, 0.2)
+    e = jnp.where(mask[..., None], e, -1e30)
+    # self edge always valid
+    e_self = jax.nn.leaky_relu(e_s + jnp.einsum("...he,he->...h", z_s,
+                                                p["a_dst"]))[..., None, :]
+    ea = jnp.concatenate([e, e_self], axis=-2)                 # [...,K+1,H]
+    alpha = jax.nn.softmax(ea, axis=-2)
+    zn_all = jnp.concatenate([z_n, z_s[..., None, :, :]], axis=-3)
+    out = jnp.einsum("...kh,...khe->...he", alpha, zn_all)
+    return out.reshape(out.shape[:-2] + (-1,))                 # concat heads
+
+
+def _apply_layer(cfg: GNNConfig, p, h_self, h_nb, mask, w_edge, w_self,
+                 last: bool):
+    if cfg.model == "gcn":
+        out = _gcn_layer(p, h_self, h_nb, w_edge, w_self)
+    elif cfg.model == "graphsage":
+        out = _sage_layer(p, h_self, h_nb, mask)
+    else:
+        out = _gat_layer(p, h_self, h_nb, mask)
+        if last:  # average heads into class logits
+            h = cfg.gat_heads
+            out = out.reshape(out.shape[:-1] + (h, -1)).mean(-2)
+    return out if last else jax.nn.relu(out)
+
+
+# ---------------------------------------------------------------------------
+# full-graph forward (ELL)
+# ---------------------------------------------------------------------------
+
+def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
+                       w_self):
+    """feats [n, r]; ell_idx/ell_w [n, K]; w_self [n] -> logits [n, C].
+
+    Distributed-execution shape (§Perf H1, measured in EXPERIMENTS.md):
+      * the gather SOURCE is explicitly replicated across the mesh before
+        jnp.take — one all-gather of [n, d] instead of GSPMD's
+        all-reduce of the [n, K, d] gather output (K x the wire bytes);
+      * when a layer shrinks its width (d_out < d_in), the linear
+        transform runs BEFORE aggregation (Ã(hW) == (Ãh)W for GCN and
+        the GraphSAGE neighbor branch) so the gather moves d_out-wide
+        rows;
+      * aggregation traffic runs in cfg.dtype (bf16 at production scale).
+    All three are exact (up to float associativity).
+    """
+    from repro import sharding as sh
+
+    h = feats
+    mask = (ell_w > 0).astype(h.dtype)
+    agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
+    n_layers = len(params)
+
+    def gather(src):
+        src = sh.constrain(src.astype(agg_dt), (None, None))  # replicate
+        return jnp.take(src, ell_idx, axis=0)                 # local gather
+
+    for li, p in enumerate(params):
+        last = li == n_layers - 1
+        if cfg.model == "gcn":
+            w = p["w"]
+            pre = w.shape[1] < h.shape[1]
+            src = (h @ w) if pre else h
+            nb = gather(src)
+            agg = (jnp.einsum("nk,nkd->nd", ell_w.astype(agg_dt), nb)
+                   .astype(h.dtype) + w_self[:, None] * src)
+            out = agg if pre else agg @ w
+        elif cfg.model == "graphsage":
+            wn = p["w_neigh"]
+            pre = wn.shape[1] < h.shape[1]
+            src = (h @ wn) if pre else h
+            nb = gather(src)
+            cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+            mean = (jnp.einsum("nk,nkd->nd", mask.astype(agg_dt), nb)
+                    .astype(h.dtype) / cnt)
+            out = h @ p["w_self"] + (mean if pre else mean @ wn)
+        else:  # gat — gathers the (usually narrower) projected z already
+            nb = gather(h).astype(h.dtype)
+            out = _gat_layer(p, h, nb, mask.astype(bool))
+            if last:
+                heads = cfg.gat_heads
+                out = out.reshape(out.shape[:-1] + (heads, -1)).mean(-2)
+        h = out if last else jax.nn.relu(out)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# mini-batch forward (fan-out tree)
+# ---------------------------------------------------------------------------
+
+def minibatch_forward(params, cfg: GNNConfig, hop_feats: Sequence,
+                      masks: Sequence, weights: Sequence, self_w: Sequence):
+    """hop_feats[d]: [b, f1..fd, r]; masks/weights[d]: [b, f1..f(d+1)].
+    Layer l aggregates hop d+1 into hop d for d < L - l."""
+    hs = list(hop_feats)
+    n_layers = len(params)
+    for li, p in enumerate(params):
+        last = li == n_layers - 1
+        new_hs = []
+        for d in range(len(hs) - 1):
+            new_hs.append(_apply_layer(
+                cfg, p, hs[d], hs[d + 1],
+                masks[d].astype(hs[d].dtype), weights[d], self_w[d], last))
+        hs = new_hs
+    assert len(hs) == 1
+    return hs[0]                                      # [b, C]
+
+
+# ---------------------------------------------------------------------------
+# losses (paper: CE and MSE, §3)
+# ---------------------------------------------------------------------------
+
+def gnn_loss(logits, labels, kind: str, n_classes: int):
+    if kind == "mse":
+        onehot = jax.nn.one_hot(labels, n_classes, dtype=F32)
+        return 0.5 * jnp.mean(jnp.sum(
+            jnp.square(logits.astype(F32) - onehot), axis=-1))
+    logz = jax.scipy.special.logsumexp(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(F32), labels[..., None],
+                             axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))

@@ -1,0 +1,110 @@
+"""Graph containers and normalized adjacency (paper §2).
+
+Ã = (D_in + I)^{-1/2} (A + I) (D_out + I)^{-1/2}   (self-loops included)
+
+Two padded device layouts:
+  * ELL  — [n, max_deg] neighbor ids + ã weights, for full-graph training
+           (TPU-friendly fixed-width rows; the paper's irregular graphs are
+           handled by masking).
+  * fan-out trees — per-hop [b, f1, ..., fd] id/weight tensors produced by
+    the sampler for mini-batch training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """CSR undirected graph with features/labels/splits (host side)."""
+    n: int
+    indptr: np.ndarray          # [n+1]
+    indices: np.ndarray         # [nnz]
+    feats: np.ndarray           # [n, r] float32
+    labels: np.ndarray          # [n] int32
+    train_mask: np.ndarray      # [n] bool
+    val_mask: np.ndarray
+    test_mask: np.ndarray
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def d_max(self) -> int:
+        return int(self.degrees.max())
+
+    @property
+    def avg_degree(self) -> float:
+        return float(self.degrees.mean())
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.labels.max()) + 1
+
+    @property
+    def train_nodes(self) -> np.ndarray:
+        return np.nonzero(self.train_mask)[0].astype(np.int32)
+
+    @property
+    def test_nodes(self) -> np.ndarray:
+        return np.nonzero(self.test_mask)[0].astype(np.int32)
+
+    @property
+    def val_nodes(self) -> np.ndarray:
+        return np.nonzero(self.val_mask)[0].astype(np.int32)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+
+def norm_coef(graph: Graph, rows: np.ndarray, cols: np.ndarray,
+              row_deg: Optional[np.ndarray] = None) -> np.ndarray:
+    """ã weights for edges (rows -> cols): 1/sqrt((din_r+1)(dout_c+1)).
+    `row_deg` overrides the row in-degree (mini-batch: # sampled = β)."""
+    deg = graph.degrees
+    din = deg[rows] if row_deg is None else row_deg
+    dout = deg[cols]
+    return (1.0 / np.sqrt((din + 1.0) * (dout + 1.0))).astype(np.float32)
+
+
+def to_ell(graph: Graph, max_deg: Optional[int] = None, rows=None
+           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Padded neighbor lists with ã weights (+ the self-loop weight).
+
+    Returns (idx [m, K], w [m, K], w_self [m]) where m = len(rows) (default
+    all nodes).  Rows with degree > K keep the K highest-weight neighbors
+    (documented truncation; max_deg defaults to d_max = no truncation).
+    """
+    rows = np.arange(graph.n, dtype=np.int32) if rows is None else rows
+    k = max_deg or graph.d_max
+    m = len(rows)
+    idx = np.zeros((m, k), np.int32)
+    w = np.zeros((m, k), np.float32)
+    deg = graph.degrees
+    for out_i, u in enumerate(rows):
+        nb = graph.neighbors(u)
+        cw = norm_coef(graph, np.full(len(nb), u), nb)
+        if len(nb) > k:
+            keep = np.argsort(-cw)[:k]
+            nb, cw = nb[keep], cw[keep]
+        idx[out_i, :len(nb)] = nb
+        w[out_i, :len(nb)] = cw
+    w_self = (1.0 / (deg[rows] + 1.0)).astype(np.float32)
+    return idx, w, w_self
+
+
+def full_adjacency_dense(graph: Graph) -> np.ndarray:
+    """Dense Ã (n x n) with self-loops — only for small theory/test graphs
+    and the Wasserstein analysis."""
+    a = np.zeros((graph.n, graph.n), np.float32)
+    for u in range(graph.n):
+        nb = graph.neighbors(u)
+        a[u, nb] = 1.0
+    a[np.arange(graph.n), np.arange(graph.n)] = 1.0
+    deg = graph.degrees + 1.0
+    dm = 1.0 / np.sqrt(deg)
+    return (a * dm[:, None]) * dm[None, :]

@@ -1,0 +1,76 @@
+"""The paper's evaluation metrics (§5.1): iteration-to-loss,
+iteration-to-accuracy, time-to-accuracy, throughput — and the cost model
+used for the Fig.-1-style bandwidth thought experiment."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class History:
+    """Per-iteration training record."""
+    losses: List[float] = dataclasses.field(default_factory=list)
+    full_losses: List[float] = dataclasses.field(default_factory=list)
+    full_loss_iters: List[int] = dataclasses.field(default_factory=list)
+    val_accs: List[float] = dataclasses.field(default_factory=list)
+    times: List[float] = dataclasses.field(default_factory=list)
+    nodes_processed: List[int] = dataclasses.field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def record(self, loss: float, val_acc: Optional[float] = None,
+               nodes: int = 0):
+        self.losses.append(float(loss))
+        if val_acc is not None:
+            self.val_accs.append(float(val_acc))
+        self.times.append(time.perf_counter() - (self._t0 or 0.0))
+        self.nodes_processed.append(nodes)
+
+
+def iteration_to_loss(hist: History, target: float) -> Optional[int]:
+    """# iterations until train loss <= target (None = never)."""
+    for i, l in enumerate(hist.losses):
+        if l <= target:
+            return i + 1
+    return None
+
+
+def iteration_to_full_loss(hist: History, target: float) -> Optional[int]:
+    """# iterations until the FULL training objective <= target — the
+    paper's iteration-to-loss (per-batch losses are too noisy; first
+    crossings of a noisy series bias small batches early)."""
+    for it, l in zip(hist.full_loss_iters, hist.full_losses):
+        if l <= target:
+            return it
+    return None
+
+
+def iteration_to_accuracy(hist: History, target: float) -> Optional[int]:
+    for i, a in enumerate(hist.val_accs):
+        if a >= target:
+            return i + 1
+    return None
+
+
+def time_to_accuracy(hist: History, target: float) -> Optional[float]:
+    it = iteration_to_accuracy(hist, target)
+    return None if it is None else hist.times[it - 1]
+
+
+def throughput_nodes_per_sec(hist: History) -> float:
+    """Training throughput = target nodes processed / wall time (§5.4)."""
+    total = sum(hist.nodes_processed)
+    t = hist.times[-1] if hist.times else 0.0
+    return total / t if t > 0 else 0.0
+
+
+def simulated_time_to_acc(iter_to_acc: int, nodes_per_iter: float,
+                          bandwidth_nodes_per_sec: float) -> float:
+    """§5.1's non-rigorous derivation: time = iters * nodes / bandwidth.
+    Used for the Fig. 1 hardware-(in)dependence demonstration without
+    real heterogeneous hardware."""
+    return iter_to_acc * nodes_per_iter / bandwidth_nodes_per_sec

@@ -1,0 +1,97 @@
+"""Mini-batch sampling: batch-size b node sampling + fan-out β uniform
+neighbor sampling per hop (GraphSAGE semantics, paper §2).
+
+Produces padded fan-out trees: hop d has ids [b, f1, ..., fd], a validity
+mask, and ã^mini edge weights computed from the SAMPLED in-degree
+(the paper's D_in^mini) and the global out-degree (columns of A_train^mini
+live in R^n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph, norm_coef
+
+
+@dataclasses.dataclass
+class FanoutBatch:
+    """One sampled mini-batch (hop 0 = target nodes)."""
+    nodes: List[np.ndarray]     # hop d: int32 [b, f1..fd]
+    masks: List[np.ndarray]     # hop d >= 1: bool, False = padding
+    weights: List[np.ndarray]   # hop d >= 1: float32 ã^mini per edge
+    self_w: List[np.ndarray]    # hop d >= 0: float32 self-loop weight
+    labels: np.ndarray          # [b]
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.nodes[0])
+
+
+def sample_neighbors(rng: np.random.Generator, graph: Graph,
+                     src: np.ndarray, fanout: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Uniform sampling WITHOUT replacement per node (DGL semantics):
+    nodes with degree <= β keep all neighbors; the rest are padding."""
+    flat = src.reshape(-1)
+    out = np.zeros((flat.size, fanout), np.int32)
+    mask = np.zeros((flat.size, fanout), bool)
+    for i, u in enumerate(flat):
+        nb = graph.neighbors(int(u))
+        if len(nb) == 0:
+            continue
+        if len(nb) <= fanout:
+            out[i, :len(nb)] = nb
+            mask[i, :len(nb)] = True
+        else:
+            sel = rng.choice(nb, size=fanout, replace=False)
+            out[i] = sel
+            mask[i] = True
+    return (out.reshape(src.shape + (fanout,)),
+            mask.reshape(src.shape + (fanout,)))
+
+
+def sample_batch(rng: np.random.Generator, graph: Graph, batch_size: int,
+                 fanouts: Sequence[int]) -> FanoutBatch:
+    """Sample b target nodes then β_d neighbors per hop."""
+    train = graph.train_nodes
+    b = min(batch_size, len(train))
+    targets = rng.choice(train, size=b, replace=False).astype(np.int32)
+    return expand_batch(rng, graph, targets, fanouts)
+
+
+def expand_batch(rng: np.random.Generator, graph: Graph,
+                 targets: np.ndarray, fanouts: Sequence[int]) -> FanoutBatch:
+    nodes = [targets]
+    masks: List[np.ndarray] = []
+    weights: List[np.ndarray] = []
+    self_w: List[np.ndarray] = []
+    deg = graph.degrees
+    self_w.append((1.0 / (deg[targets] + 1.0)).astype(np.float32))
+    cur = targets
+    for beta in fanouts:
+        nb, mk = sample_neighbors(rng, graph, cur, beta)
+        # D_in^mini: number of actually-sampled in-neighbors per row
+        samp_deg = mk.sum(-1).astype(np.float32)
+        rows = np.broadcast_to(cur[..., None], nb.shape).reshape(-1)
+        row_deg = np.broadcast_to(samp_deg[..., None], nb.shape).reshape(-1)
+        w = norm_coef(graph, rows, nb.reshape(-1), row_deg=row_deg)
+        w = (w.reshape(nb.shape) * mk).astype(np.float32)
+        nodes.append(nb)
+        masks.append(mk)
+        weights.append(w)
+        self_w.append((1.0 / (deg[nb.reshape(-1)] + 1.0))
+                      .reshape(nb.shape).astype(np.float32))
+        cur = nb
+    return FanoutBatch(nodes=nodes, masks=masks, weights=weights,
+                       self_w=self_w,
+                       labels=graph.labels[targets].astype(np.int32))
+
+
+def gather_features(graph: Graph, batch: FanoutBatch) -> List[np.ndarray]:
+    """Host-side feature gather per hop (the paper's CPU->GPU loading path;
+    on TPU this is the infeed)."""
+    return [graph.feats[ids.reshape(-1)].reshape(ids.shape + (-1,))
+            for ids in batch.nodes]

@@ -1,0 +1,164 @@
+"""Full-graph GD vs mini-batch SGD training loops (the paper's two
+paradigms) with identical model code and metric recording.
+
+Full-graph: GD over all training nodes each iteration, ELL layout.
+Mini-batch: per-iteration (b, β)-sampled fan-out trees, SGD.
+Both record History for iteration-to-loss / iteration-to-accuracy /
+time-to-accuracy / throughput (§5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core import gnn as G
+from repro.core.graph import Graph, to_ell
+from repro.core.metrics import History
+from repro.core.sampler import FanoutBatch, expand_batch, gather_features, \
+    sample_batch
+from repro.optim import sgd
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: list
+    history: History
+    final_test_acc: float
+
+
+def _device_ell(graph: Graph, max_deg: Optional[int] = None):
+    idx, w, w_self = to_ell(graph, max_deg=max_deg)
+    return (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(w_self),
+            jnp.asarray(graph.feats), jnp.asarray(graph.labels))
+
+
+def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes
+                  ) -> float:
+    """Inference uses ALL neighbors across the entire graph (§4.1)."""
+    idx, w, w_self, feats, labels = ell
+    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+    sel = jnp.asarray(nodes)
+    return float(G.accuracy(logits[sel], labels[sel]))
+
+
+def train_full_graph(graph: Graph, cfg: GNNConfig, lr: float,
+                     n_iters: int, eval_every: int = 10, seed: int = 0,
+                     target_loss: Optional[float] = None,
+                     max_deg: Optional[int] = None) -> TrainResult:
+    """Paper's full-graph paradigm: GD on all n_train nodes, Ã_train^full."""
+    ell = _device_ell(graph, max_deg)
+    idx, w, w_self, feats, labels = ell
+    train_nodes = jnp.asarray(graph.train_nodes)
+    key = jax.random.key(seed)
+    params = G.init_gnn(key, cfg, graph.feats.shape[1])
+    opt = sgd(lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state):
+        def loss_fn(p):
+            logits = G.full_graph_forward(p, cfg, feats, idx, w, w_self)
+            lt = logits[train_nodes]
+            return G.gnn_loss(lt, labels[train_nodes], cfg.loss,
+                              cfg.n_classes)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    hist = History()
+    hist.start()
+    n_train = len(graph.train_nodes)
+    for it in range(n_iters):
+        params, opt_state, loss = step(params, opt_state)
+        val = (evaluate_full(params, cfg, graph, ell, graph.val_nodes)
+               if it % eval_every == 0 else None)
+        hist.record(float(loss), val, nodes=n_train)
+        # full-graph training: the per-iteration loss IS the full loss
+        hist.full_losses.append(float(loss))
+        hist.full_loss_iters.append(it + 1)
+        if target_loss is not None and float(loss) <= target_loss:
+            break
+    acc = evaluate_full(params, cfg, graph, ell, graph.test_nodes)
+    return TrainResult(params, hist, acc)
+
+
+def _batch_to_device(graph: Graph, batch: FanoutBatch):
+    feats = [jnp.asarray(f) for f in gather_features(graph, batch)]
+    masks = [jnp.asarray(m.astype(np.float32)) for m in batch.masks]
+    weights = [jnp.asarray(wt) for wt in batch.weights]
+    self_w = [jnp.asarray(s) for s in batch.self_w]
+    return feats, masks, weights, self_w, jnp.asarray(batch.labels)
+
+
+def train_minibatch(graph: Graph, cfg: GNNConfig, lr: float, n_iters: int,
+                    batch_size: Optional[int] = None,
+                    fanouts: Optional[Sequence[int]] = None,
+                    eval_every: int = 10, seed: int = 0,
+                    target_loss: Optional[float] = None,
+                    track_full_loss_every: int = 0) -> TrainResult:
+    """Paper's mini-batch paradigm: per-iteration (b, β) sampling + SGD.
+    Host-side sampling emulates the CPU-side loaders of DGL/PyG."""
+    b = batch_size or cfg.batch_size
+    fanouts = tuple(fanouts or cfg.fanout)
+    assert len(fanouts) == cfg.n_layers
+    rng = np.random.default_rng(seed)
+    key = jax.random.key(seed)
+    params = G.init_gnn(key, cfg, graph.feats.shape[1])
+    opt = sgd(lr)
+    opt_state = opt.init(params)
+    ell = _device_ell(graph)   # for evaluation only
+
+    @jax.jit
+    def step(params, opt_state, feats, masks, weights, self_w, labels):
+        def loss_fn(p):
+            logits = G.minibatch_forward(p, cfg, feats, masks, weights,
+                                         self_w)
+            return G.gnn_loss(logits, labels, cfg.loss, cfg.n_classes)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    train_sel = jnp.asarray(graph.train_nodes)
+    idx_e, w_e, ws_e, feats_e, labels_e = ell
+
+    @jax.jit
+    def full_loss(params):
+        logits = G.full_graph_forward(params, cfg, feats_e, idx_e, w_e,
+                                      ws_e)
+        return G.gnn_loss(logits[train_sel], labels_e[train_sel], cfg.loss,
+                          cfg.n_classes)
+
+    hist = History()
+    hist.start()
+    for it in range(n_iters):
+        fb = sample_batch(rng, graph, b, fanouts)
+        feats, masks, weights, self_w, labels = _batch_to_device(graph, fb)
+        params, opt_state, loss = step(params, opt_state, feats, masks,
+                                       weights, self_w, labels)
+        val = (evaluate_full(params, cfg, graph, ell, graph.val_nodes)
+               if it % eval_every == 0 else None)
+        hist.record(float(loss), val, nodes=fb.batch_size)
+        if track_full_loss_every and it % track_full_loss_every == 0:
+            hist.full_losses.append(float(full_loss(params)))
+            hist.full_loss_iters.append(it + 1)
+        if target_loss is not None and float(loss) <= target_loss:
+            break
+    acc = evaluate_full(params, cfg, graph, ell, graph.test_nodes)
+    return TrainResult(params, hist, acc)
+
+
+def full_graph_train_loss(graph: Graph, params, cfg: GNNConfig) -> float:
+    """Loss of the CURRENT params on the full training set — the paper
+    evaluates mini-batch convergence against the full-graph objective."""
+    ell = _device_ell(graph)
+    idx, w, w_self, feats, labels = ell
+    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+    sel = jnp.asarray(graph.train_nodes)
+    return float(G.gnn_loss(logits[sel], labels[sel], cfg.loss,
+                            cfg.n_classes))

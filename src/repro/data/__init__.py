@@ -1,0 +1,1 @@
+from repro.data.synth import make_sbm_graph, PRESETS, make_preset, token_batches  # noqa: F401

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: causal (optionally windowed) attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: [B, H, S, D] -> [B, H, S, D]."""
+    s = q.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(s)
+    if causal:
+        mask = pos[None, :] <= pos[:, None]
+        if window:
+            mask = mask & (pos[None, :] > pos[:, None] - window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

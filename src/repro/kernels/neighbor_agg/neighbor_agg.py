@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: weighted neighbor aggregation (software gather).
+
+TPU adaptation of the GNN gather hot-spot (DESIGN.md §3): TPUs have no
+hardware gather from HBM, so the neighbor ids are SCALAR-PREFETCHED and
+drive the feature BlockSpec's index_map — each grid step DMAs exactly one
+needed feature row tile HBM->VMEM and accumulates
+
+    out[b, d_tile] += w[b, k] * feats[idx[b, k], d_tile]
+
+into a revisited output block (grid order puts k innermost so the output
+tile stays resident in VMEM across the K accumulation steps).
+
+Grid: (B, D // d_tile, K).  VMEM working set per step:
+one feature row tile (d_tile) + one output tile (d_tile) + scalar weight.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, w_ref, feat_ref, out_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    weight = w_ref[0, 0].astype(jnp.float32)
+    row = feat_ref[...].astype(jnp.float32)
+    acc_ref[...] += weight * row
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def neighbor_agg_pallas(feats, idx, w, *, d_tile: int = 128,
+                        interpret: bool = True):
+    """feats [N, D]; idx [B, K] int32; w [B, K].  Returns [B, D].
+
+    interpret=True on CPU (validation); on TPU pass interpret=False.
+    D must be a multiple of d_tile (ops.py pads).
+    """
+    n, d = feats.shape
+    b, k = idx.shape
+    assert d % d_tile == 0, (d, d_tile)
+    grid = (b, d // d_tile, k)
+
+    flat_idx = idx.reshape(-1)               # scalar-prefetch operand
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # w[b, k] as a (1, 1) block
+            pl.BlockSpec((1, 1), lambda bi, di, ki, idx_p: (bi, ki)),
+            # the gathered feature row tile — index_map reads the
+            # scalar-prefetched neighbor id
+            pl.BlockSpec((1, d_tile),
+                         lambda bi, di, ki, idx_p: (idx_p[bi * k + ki], di)),
+        ],
+        out_specs=pl.BlockSpec((1, d_tile),
+                               lambda bi, di, ki, idx_p: (bi, di)),
+        scratch_shapes=[pltpu.VMEM((1, d_tile), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), feats.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )
+    return fn(flat_idx, w, feats)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the neighbor-aggregation kernel.
+
+Handles D-padding to the VMEM lane tile, dtype plumbing, and the kernel /
+pure-jnp dispatch (the jnp path is what the 512-device dry-run lowers; the
+Pallas path targets real TPUs and is validated in interpret mode)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.neighbor_agg.neighbor_agg import neighbor_agg_pallas
+from repro.kernels.neighbor_agg.ref import neighbor_agg_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
+                                             "d_tile"))
+def neighbor_agg(feats, idx, w, *, use_kernel: bool = False,
+                 interpret: bool = True, d_tile: int = 128):
+    """out[b] = Σ_k w[b,k] · feats[idx[b,k]].
+
+    feats [N, D]; idx [B, K] int32; w [B, K] (0 ⇒ padding edge).
+    """
+    if not use_kernel:
+        return neighbor_agg_ref(feats, idx, w)
+    n, d = feats.shape
+    pad = (-d) % d_tile
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad)))
+    out = neighbor_agg_pallas(feats, idx, w, d_tile=d_tile,
+                              interpret=interpret)
+    return out[:, :d] if pad else out

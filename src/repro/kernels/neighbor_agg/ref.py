@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the neighbor-aggregation kernel.
+
+out[b, :] = sum_k w[b, k] * feats[idx[b, k], :]
+
+This is the message-passing hot-spot of both GNN training paradigms
+(paper §1: mini-batch gathers; full-graph ELL aggregation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def neighbor_agg_ref(feats, idx, w):
+    """feats [N, D]; idx [B, K] int32; w [B, K] (0 = padding)."""
+    gathered = jnp.take(feats, idx, axis=0)          # [B, K, D]
+    return jnp.einsum("bk,bkd->bd", w.astype(jnp.float32),
+                      gathered.astype(jnp.float32)).astype(feats.dtype)

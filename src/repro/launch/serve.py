@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a prompt batch, then step the decoder.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --smoke --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    assert cfg.family != "gnn", "GNNs don't decode; use launch.train"
+    key = jax.random.key(args.seed)
+    params = M.init_model(key, cfg)
+    rng = np.random.default_rng(args.seed)
+
+    b, s = args.batch, args.prompt_len
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.frontend_seq:
+        batch["patches"] = jnp.zeros((b, cfg.frontend_seq, cfg.d_model),
+                                     M._dt(cfg))
+    if cfg.n_enc_layers:
+        batch["frames"] = jnp.zeros((b, cfg.enc_seq, cfg.d_model),
+                                    M._dt(cfg))
+
+    prefill = jax.jit(lambda p, bb: M.prefill(p, cfg, bb))
+    decode = jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    toks = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        toks.append(np.asarray(tok[:, 0]))
+        logits, cache = decode(params, cache, tok)
+        if args.temperature > 0:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(
+                sk, logits / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_dec = time.perf_counter() - t0
+
+    out = np.stack(toks, 1)
+    print(json.dumps({
+        "arch": args.arch,
+        "prefill_s": round(t_prefill, 4),
+        "decode_tok_per_s": round(args.batch * args.gen / t_dec, 2),
+        "generated_shape": list(out.shape),
+        "sample_tokens": out[0][:16].tolist(),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.model import init_model, forward_train, prefill, decode_step, init_cache  # noqa: F401

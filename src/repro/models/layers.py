@@ -1,0 +1,319 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (chunked
+online-softmax for train/prefill, direct for decode), GeGLU/SwiGLU MLP.
+
+All functions are pure; params are plain dicts, with a parallel dict of
+*logical* PartitionSpec tuples (see repro.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as sh
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out_shape: Tuple[int, ...],
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    shape = (d_in,) + tuple(d_out_shape)
+    return _normal(key, shape, scale)
+
+
+# ---------------------------------------------------------------------------
+# norm / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    angles = angles[..., None, :]                     # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq = sh.padded_heads(cfg.n_heads)
+    hkv = cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {}
+    p["wq"] = dense_init(ks[0], d, (hq, hd))
+    # kv heads stay unpadded; replicated over model unless divisible.
+    p["wk"] = dense_init(ks[1], d, (hkv, hd))
+    p["wv"] = dense_init(ks[2], d, (hkv, hd))
+    p["wo"] = dense_init(ks[3], hq * hd, (d,)).reshape(hq, hd, d)
+    if hq != cfg.n_heads:
+        # zero the padded heads end-to-end: exact numerics, pure flop padding.
+        mask = (jnp.arange(hq) < cfg.n_heads).astype(p["wq"].dtype)
+        p["wq"] = p["wq"] * mask[None, :, None]
+        p["wo"] = p["wo"] * mask[:, None, None]
+    return p
+
+
+def _expand_kv(k, hq: int):
+    """[B,S,Hkv,D] -> [B,S,Hq,D] by GQA group broadcast."""
+    b, s, hkv, d = k.shape
+    g = hq // hkv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, g, d))
+    return k.reshape(b, s, hkv * g, d)
+
+
+def qkv(params, x, cfg: ModelConfig, positions, use_rope: bool):
+    """Megatron-SP transition: x arrives sequence-sharded (seq on `model`);
+    q/k/v leave HEAD-sharded with full sequence.  The explicit constraints
+    make GSPMD do the seq-gather/head-scatter all-to-all instead of
+    panicking into batch replication."""
+    dt = x.dtype
+    hq = params["wq"].shape[-2]
+    hkv = params["wk"].shape[-2]
+    q_ax = sh.MODEL if sh.shard_heads(hq) else None
+    kv_ax = sh.MODEL if sh.shard_heads(hkv) else None
+    # §Perf H2c: gather the sequence ONCE on the input (Megatron-SP "g")
+    # instead of letting GSPMD gather q, k and v separately post-matmul.
+    x = sh.constrain(x, (sh.BATCH, None, None))
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q = sh.constrain(q, (sh.BATCH, None, q_ax, None))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    k = sh.constrain(k, (sh.BATCH, None, kv_ax, None))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    v = sh.constrain(v, (sh.BATCH, None, kv_ax, None))
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _rs_eligible(mesh, contract_sharded: bool, s: int, b: int) -> bool:
+    """Can we reduce-scatter the SP projection explicitly?"""
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    return (contract_sharded and s > 1 and s % sizes["model"] == 0
+            and b % dp == 0)
+
+
+def out_proj(params, attn_out, dtype):
+    """Head-sharded partials return to the seq-sharded residual stream.
+
+    §Perf H2: GSPMD lowers the plain constraint to all-reduce(full
+    [B,S,d]) + slice (2x the bytes of a reduce-scatter), so when shapes
+    allow we emit the reduce-scatter explicitly via shard_map +
+    psum_scatter over the seq dim (Megatron-SP's g-bar)."""
+    wo = params["wo"].astype(dtype)
+    mesh = sh.active_mesh()
+    b, s = attn_out.shape[0], attn_out.shape[1]
+    if _rs_eligible(mesh, sh.shard_heads(wo.shape[0]), s, b):
+        ba = sh.batch_mesh_axes(mesh)
+        from jax.sharding import PartitionSpec as P
+
+        def f(xl, wl):
+            part = jnp.einsum("bshk,hkd->bsd", xl, wl)
+            return jax.lax.psum_scatter(part, "model",
+                                        scatter_dimension=1, tiled=True)
+        return jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P(ba, None, "model", None), P("model", None, None)),
+            out_specs=P(ba, "model", None), check_vma=False)(attn_out, wo)
+    out = jnp.einsum("bshk,hkd->bsd", attn_out, wo)
+    return sh.constrain(out, (sh.BATCH, sh.MODEL, None))
+
+
+def direct_attention(q, k, v, mask, dtype):
+    """Materialized-scores attention. q:[B,Sq,H,D] k,v:[B,Sk,H,D];
+    mask broadcastable to [B,H,Sq,Sk] (True = keep)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_causal_attention(q, k, v, *, q_chunk: int, window: int = 0):
+    """Flash-style: scan over query chunks, never materializing [S,S].
+
+    q, k, v: [B, S, H, D] (kv already GQA-expanded).  window=0 => global
+    causal; window>0 => sliding-window causal (keys within (p-W, p]).
+    For window>0 each q-chunk slices a fixed (W + q_chunk) key span —
+    no wasted score FLOPs outside the band beyond chunk rounding.
+    """
+    b, s, h, d = q.shape
+    dt = q.dtype
+    nq = s // q_chunk
+    assert nq * q_chunk == s, (s, q_chunk)
+    scale = 1.0 / math.sqrt(d)
+
+    if window:
+        span = window + q_chunk
+
+    def one_chunk(qi):
+        q_start = qi * q_chunk
+        qc = lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=1)
+        qpos = q_start + jnp.arange(q_chunk)
+        if window:
+            k_start = jnp.maximum(q_start + q_chunk - span, 0)
+            kc = lax.dynamic_slice_in_dim(k, k_start, min(span, s), axis=1)
+            vc = lax.dynamic_slice_in_dim(v, k_start, min(span, s), axis=1)
+            kpos = k_start + jnp.arange(kc.shape[1])
+            keep = ((kpos[None, :] <= qpos[:, None])
+                    & (kpos[None, :] > qpos[:, None] - window))
+        else:
+            kc, vc = k, v
+            kpos = jnp.arange(s)
+            keep = kpos[None, :] <= qpos[:, None]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32)
+        scores = jnp.where(keep[None, None], scores * scale, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vc)
+
+    # flash-attention-style remat: never save per-chunk scores/probs/masks
+    # for backward — recompute them chunk-by-chunk (§Perf iteration 0).
+    one_chunk = jax.checkpoint(
+        one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    out = lax.map(one_chunk, jnp.arange(nq))          # [nq, B, qc, H, D]
+    out = jnp.moveaxis(out, 0, 1)                     # [B, nq, qc, H, D]
+    return out.reshape(b, s, h, d)
+
+
+def attention_block(params, x, cfg: ModelConfig, layer_type: str, positions,
+                    *, nope: bool = False,
+                    enc_kv: Optional[Tuple[Any, Any]] = None):
+    """Train/prefill attention ('attn' global or 'local' window).
+    Returns (out, (k, v)) so prefill can build the cache."""
+    use_rope = not nope
+    q, k, v = qkv(params, x, cfg, positions, use_rope)
+    hq = q.shape[2]
+    ke, ve = _expand_kv(k, hq), _expand_kv(v, hq)
+    window = cfg.sliding_window if layer_type == "local" else 0
+    o = chunked_causal_attention(q, ke, ve, q_chunk=cfg.q_chunk, window=window)
+    o = out_proj(params, o, x.dtype)
+    return o, (k, v)
+
+
+def cross_attention_block(params, x, enc_out, cfg: ModelConfig):
+    """Whisper decoder cross-attention: full (non-causal) over encoder
+    frames.  enc length is small (1500) so scores materialize."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dt))
+    hq = q.shape[2]
+    o = direct_attention(q, _expand_kv(k, hq), _expand_kv(v, hq), None, dt)
+    return out_proj(params, o, dt)
+
+
+def decode_attention(params, x, cfg: ModelConfig, k_cache, v_cache,
+                     cache_positions, pos, *, nope: bool = False,
+                     window: int = 0):
+    """Single-token decode.  x: [B,1,d]; k_cache/v_cache: [B,S,Hkv,D]
+    (seq dim model-sharded); cache_positions: [S] global positions held in
+    each slot (-1 = empty); pos: scalar current position.
+
+    Returns (out, new_k_slot, new_v_slot) — the caller owns the cache write.
+    """
+    dt = x.dtype
+    q, k_new, v_new = qkv(params, x, cfg, jnp.full((1,), pos), not nope)
+    # Attend over cache *plus* the new token.
+    hq = q.shape[2]
+    valid = (cache_positions >= 0) & (cache_positions <= pos)
+    if window:
+        valid = valid & (cache_positions > pos - window)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    ke = _expand_kv(k_cache.astype(dt), hq)           # [B,S,Hq,D]
+    ve = _expand_kv(v_cache.astype(dt), hq)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    self_score = (jnp.einsum("bqhd,bqhd->bhq", q,
+                             _expand_kv(k_new, hq)).astype(jnp.float32)
+                  * scale)[..., None]                 # [B,H,1,1]
+    scores = jnp.concatenate([scores, self_score], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    o_cache = jnp.einsum("bhqk,bkhd->bqhd", probs[..., :-1], ve)
+    p_self = jnp.moveaxis(probs[..., -1], 1, 2)[..., None]      # [B,1,H,1]
+    o = o_cache + p_self * _expand_kv(v_new, hq)
+    o = out_proj(params, o, dt)
+    return o, k_new[:, 0], v_new[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, (f,)),
+        "w_up": dense_init(ks[1], d, (f,)),
+        "w_down": dense_init(ks[2], f, (d,)),
+    }
+
+
+def mlp_block(params, x, cfg: ModelConfig):
+    """SP transition mirror of qkv: seq-sharded in, d_ff-sharded inside,
+    seq-sharded out (w_down partial-sums reduce-scatter back to seq)."""
+    dt = x.dtype
+    x = sh.constrain(x, (sh.BATCH, None, None))   # gather seq once (H2c)
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    g = sh.constrain(g, (sh.BATCH, None, sh.MODEL))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    u = sh.constrain(u, (sh.BATCH, None, sh.MODEL))
+    act = jax.nn.gelu(g, approximate=True) if cfg.mlp_act == "gelu" \
+        else jax.nn.silu(g)
+    h = act * u
+    wd = params["w_down"].astype(dt)
+    mesh = sh.active_mesh()
+    b, s = h.shape[0], h.shape[1]
+    if _rs_eligible(mesh, wd.shape[0] % sh.MODEL_PAR == 0, s, b):
+        ba = sh.batch_mesh_axes(mesh)
+        from jax.sharding import PartitionSpec as P
+
+        def f(hl, wl):
+            part = jnp.einsum("bsf,fd->bsd", hl, wl)
+            return jax.lax.psum_scatter(part, "model",
+                                        scatter_dimension=1, tiled=True)
+        return jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P(ba, None, "model"), P("model", None)),
+            out_specs=P(ba, "model", None), check_vma=False)(h, wd)
+    out = jnp.einsum("bsf,fd->bsd", h, wd)
+    return sh.constrain(out, (sh.BATCH, sh.MODEL, None))

@@ -1,0 +1,610 @@
+"""Composable decoder/enc-dec model assembled from a layer-pattern plan.
+
+A config's ``pattern`` (e.g. gemma3's 5x local + 1x global, zamba2's
+6x mamba + shared-attn) is grouped into *runs* of consecutive identical
+block types.  Each run's layer params are stacked on a leading dim and
+executed with ``lax.scan`` (one compiled body per run — keeps the 512-device
+SPMD compile tractable even for 81-layer stacks).  zamba2-style
+``shared_attn`` blocks hold ONE param set reused at every application.
+
+Shardings are derived from param *names + shapes* by ``param_specs`` —
+a single source of truth used by smoke tests, the dry-run and the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as sh
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+F32 = jnp.float32
+LOSS_CHUNK = 512          # vocab-logit seq chunking (never materialize [B,S,V])
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    type: str          # attn | local | mamba | shared_attn
+    count: int
+    shared: bool
+
+
+def build_plan(cfg: ModelConfig) -> Tuple[Run, ...]:
+    runs: List[Run] = []
+    for t in cfg.pattern:
+        if t == "shared_attn":
+            runs.append(Run("shared_attn", 1, True))
+        elif runs and runs[-1].type == t and not runs[-1].shared:
+            runs[-1] = Run(t, runs[-1].count + 1, False)
+        else:
+            runs.append(Run(t, 1, False))
+    return tuple(runs)
+
+
+def _vp(cfg: ModelConfig) -> int:
+    return sh.pad_to(cfg.vocab_size, sh.MODEL_PAR)
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg: ModelConfig, *, moe: bool, cross: bool):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": jnp.zeros((d,)), "norm2": jnp.zeros((d,))}
+    p["attn"] = L.init_attention(ks[0], cfg)
+    if cross:
+        p["normx"] = jnp.zeros((d,))
+        p["cross"] = L.init_attention(ks[1], cfg)
+    if moe:
+        p["moe"] = MOE.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig):
+    return {"norm1": jnp.zeros((cfg.d_model,)),
+            "mamba": SSM.init_mamba(key, cfg)}
+
+
+def _stack(key, count: int, init_fn):
+    keys = jax.random.split(key, count)
+    ps = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ps)
+
+
+def init_model(key, cfg: ModelConfig):
+    """Returns the params pytree (f32 master weights)."""
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 6)
+    d = cfg.d_model
+    vp = _vp(cfg)
+    is_moe = cfg.n_experts > 0
+    cross = cfg.n_enc_layers > 0
+
+    params: Dict[str, Any] = {
+        "embed": (d ** -0.5) * jax.random.normal(keys[0], (vp, d)),
+        "final_norm": jnp.zeros((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (d ** -0.5) * jax.random.normal(keys[1], (d, vp))
+
+    run_ps = []
+    shared_done = False
+    for i, run in enumerate(plan):
+        k = keys[2 + i]
+        if run.shared:
+            if not shared_done:
+                params["shared_attn"] = _init_attn_layer(
+                    k, cfg, moe=False, cross=False)
+                shared_done = True
+            run_ps.append({})
+        elif run.type == "mamba":
+            run_ps.append(_stack(k, run.count,
+                                 lambda kk: _init_mamba_layer(kk, cfg)))
+        else:
+            run_ps.append(_stack(
+                k, run.count,
+                lambda kk: _init_attn_layer(kk, cfg, moe=is_moe, cross=cross)))
+    params["runs"] = tuple(run_ps)
+
+    if cross:  # whisper encoder
+        params["enc"] = {
+            "runs": (_stack(keys[-3], cfg.n_enc_layers,
+                            lambda kk: _init_attn_layer(kk, cfg, moe=False,
+                                                        cross=False)),),
+            "pos_embed": 0.02 * jax.random.normal(keys[-2],
+                                                  (cfg.enc_seq, d)),
+            "final_norm": jnp.zeros((d,)),
+        }
+    if cfg.frontend_seq:  # vlm projector (stub frontend -> backbone)
+        params["proj"] = (d ** -0.5) * jax.random.normal(keys[-1], (d, d))
+    return params
+
+
+def param_specs(cfg: ModelConfig, params) -> Any:
+    """Logical shardings from param names + shapes (single source of
+    truth).  Works on real arrays or ShapeDtypeStructs.
+
+    2D weight sharding: heads/experts/d_ff/vocab shard over `model`
+    (tensor parallel) AND the d_model-ish dim shards over `fsdp` (= the
+    data axis, ZeRO-3 style) so 100B+ params + AdamW state fit per chip.
+    Gradients/optimizer state inherit the same specs."""
+    _, ssm_h, _, _ = SSM.ssm_dims(cfg) if ("mamba" in cfg.pattern) \
+        else (0, 1, 0, 0)
+    ssm_ax = sh.MODEL if ssm_h % sh.MODEL_PAR == 0 else None
+
+    def fs(dim: int):
+        return sh.FSDP if dim % sh.MODEL_PAR == 0 else None
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        stacked = "runs" in names and "pos_embed" not in names \
+            and "final_norm" not in names
+        nd = leaf.ndim
+        shp = leaf.shape[1:] if stacked else leaf.shape
+        base: Tuple[Optional[str], ...]
+        if name == "embed":
+            base = (sh.MODEL, fs(shp[1]))
+        elif name == "lm_head":
+            base = (fs(shp[0]), sh.MODEL)
+        elif name == "wq":
+            ax = sh.MODEL if sh.shard_heads(shp[1]) else None
+            base = (fs(shp[0]), ax, None)
+        elif name == "wo":
+            ax = sh.MODEL if sh.shard_heads(shp[0]) else None
+            base = (ax, None, fs(shp[2]))
+        elif name in ("wk", "wv"):
+            ax = sh.MODEL if sh.shard_heads(shp[1]) else None
+            base = (fs(shp[0]), ax, None)
+        elif name in ("w_gate", "w_up", "w_down"):
+            if len(shp) == 3:           # moe expert weights [E, a, b]
+                e_ax = sh.MODEL if shp[0] % sh.MODEL_PAR == 0 else None
+                base = (e_ax, fs(shp[1]), None)
+            elif name == "w_down":      # dense mlp [f, d]
+                base = (sh.MODEL, fs(shp[1]))
+            else:                       # dense mlp [d, f]
+                base = (fs(shp[0]), sh.MODEL)
+        elif name in ("w_z", "w_x", "w_bc", "w_dt"):
+            base = (fs(shp[0]), ssm_ax)
+        elif name in ("conv_x", "conv_bc"):
+            base = (None, ssm_ax)
+        elif name in ("dt_bias", "A_log", "D"):
+            base = (ssm_ax,)
+        elif name == "norm":            # mamba gated-norm scale [d_in]
+            base = (ssm_ax,)
+        elif name == "w_out":           # mamba out proj [d_in, d]
+            base = (ssm_ax, fs(shp[1]))
+        elif name == "proj":            # vlm projector [d, d]
+            base = (fs(shp[0]), None)
+        else:                           # norms, router, pos_embed...
+            base = (None,) * len(shp)
+        if stacked:
+            base = (None,) + base
+        assert len(base) == nd, (names, leaf.shape, base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# ---------------------------------------------------------------------------
+# blocks (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(lp, x, cfg: ModelConfig, ltype: str, positions,
+                    enc_out, nope_global: bool):
+    h, kv = L.attention_block(
+        lp["attn"], L.rms_norm(x, lp["norm1"], cfg.norm_eps), cfg, ltype,
+        positions, nope=(nope_global and ltype == "attn"))
+    x = x + h
+    if "cross" in lp:
+        h = L.cross_attention_block(
+            lp["cross"], L.rms_norm(x, lp["normx"], cfg.norm_eps),
+            enc_out, cfg)
+        x = x + h
+    y = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if "moe" in lp:
+        h, aux = MOE.moe_block(lp["moe"], y, cfg)
+    else:
+        h, aux = L.mlp_block(lp["mlp"], y, cfg), jnp.zeros((), F32)
+    x = sh.constrain(x + h, (sh.BATCH, sh.MODEL, None))
+    return x, kv, aux
+
+
+def _run_forward(run: Run, rp, shared_p, x, cfg: ModelConfig, positions,
+                 enc_out, collect_kv: bool):
+    """Execute one run in train/prefill mode.  Returns (x, kv_stack, aux)."""
+    nope_global = cfg.family == "moe"   # llama4 iRoPE: global layers NoPE
+
+    if run.shared:
+        x, kv, aux = _attn_mlp_block(shared_p, x, cfg, "attn", positions,
+                                     enc_out, False)
+        kv_out = jax.tree.map(lambda t: t[None], kv) if collect_kv else 0.0
+        return x, kv_out, aux
+
+    if run.type == "mamba":
+        def body(carry, lp):
+            h, st = SSM.mamba_block(
+                lp["mamba"], L.rms_norm(carry, lp["norm1"], cfg.norm_eps),
+                cfg)
+            y = sh.constrain(carry + h, (sh.BATCH, sh.MODEL, None))
+            return y, (st if collect_kv else 0.0)
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, sts = lax.scan(body, x, rp)
+        return x, sts, jnp.zeros((), F32)
+
+    def body(carry, lp):
+        y, kv, aux = _attn_mlp_block(lp, carry, cfg, run.type, positions,
+                                     enc_out, nope_global)
+        return y, ((kv if collect_kv else 0.0), aux)
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, (kvs, auxs) = lax.scan(body, x, rp)
+    return x, kvs, jnp.sum(auxs)
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings [B, enc_seq, d]
+    (bidirectional attention)."""
+    enc = params["enc"]
+    x = frames + enc["pos_embed"][None].astype(frames.dtype)
+    ep = enc["runs"][0]
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["norm1"], cfg.norm_eps)
+        dt = carry.dtype
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(dt))
+        hq = q.shape[2]
+        o = L.direct_attention(q, L._expand_kv(k, hq), L._expand_kv(v, hq),
+                               None, dt)
+        carry = carry + L.out_proj(lp["attn"], o, dt)
+        y = L.rms_norm(carry, lp["norm2"], cfg.norm_eps)
+        carry = carry + L.mlp_block(lp["mlp"], y, cfg)
+        return carry, 0.0
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body, x, ep)
+    return L.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    e = params["embed"].astype(_dt(cfg))
+    x = jnp.take(e, tokens, axis=0)
+    # sequence-parallel residual stream (Megatron-SP): activations are
+    # [batch-sharded, seq over `model`, full d_model] between layers.
+    return sh.constrain(x, (sh.BATCH, sh.MODEL, None))
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T            # [d, Vp]
+    return params["lm_head"]
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    w = _head_matrix(params, cfg).astype(hidden.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w)
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:                # mask vocab padding
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, neg)
+    return logits
+
+
+def chunked_lm_loss(params, cfg: ModelConfig, hidden, labels):
+    """CE over vocab without materializing [B,S,V]: scan over seq chunks.
+    labels: int32 [B,S], -1 = ignored position."""
+    b, s, d = hidden.shape
+    c = min(LOSS_CHUNK, s)
+    nc = s // c
+    assert nc * c == s, (s, c)
+    h = jnp.moveaxis(hidden.reshape(b, nc, c, d), 1, 0)
+    lab = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+
+    def body(carry, inp):
+        hc, lc = inp                              # [B,c,d], [B,c]
+        lg = logits_fn(params, cfg, hc).astype(F32)
+        mask = (lc >= 0)
+        li = jnp.maximum(lc, 0)
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, li[..., None], axis=-1)[..., 0]
+        loss_sum = jnp.sum((logz - ll) * mask)
+        correct = jnp.sum((jnp.argmax(lg, -1) == li) * mask)
+        tot, ls, cr = carry
+        return (tot + jnp.sum(mask), ls + loss_sum, cr + correct), 0.0
+
+    # never save per-chunk logits for backward — recompute (vocab-sharded
+    # logits at f32 are the single biggest train buffer otherwise)
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, loss_sum, correct), _ = lax.scan(
+        body, (jnp.zeros((), F32),) * 3, (h, lab))
+    return loss_sum / jnp.maximum(tot, 1.0), correct / jnp.maximum(tot, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# public forward passes
+# ---------------------------------------------------------------------------
+
+def backbone(params, cfg: ModelConfig, x, positions, enc_out=None,
+             collect_kv: bool = False):
+    plan = build_plan(cfg)
+    aux_total = jnp.zeros((), F32)
+    kvs = []
+    for i, run in enumerate(plan):
+        x, kv, aux = _run_forward(run, params["runs"][i],
+                                  params.get("shared_attn"), x, cfg,
+                                  positions, enc_out, collect_kv)
+        kvs.append(kv)
+        aux_total = aux_total + aux
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, kvs, aux_total
+
+
+def forward_train(params, cfg: ModelConfig, batch):
+    """batch: tokens [B,St], labels [B,St] (-1 ignored), optional
+    'patches' [B,P,d] (vlm) or 'frames' [B,enc,d] (audio)."""
+    dt = _dt(cfg)
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.frontend_seq:
+        patches = batch["patches"].astype(dt)
+        patches = jnp.einsum("bpd,de->bpe", patches, params["proj"].astype(dt))
+        x = jnp.concatenate([patches, x], axis=1)
+        pad = jnp.full(patches.shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = _encode(params, cfg, batch["frames"].astype(dt))
+    positions = jnp.arange(x.shape[1])
+    h, _, aux = backbone(params, cfg, x.astype(dt), positions, enc_out)
+    loss, acc = chunked_lm_loss(params, cfg, h, labels)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux, "acc": acc}
+
+
+# --- serving ---------------------------------------------------------------
+
+def cache_capacity(cfg: ModelConfig, run: Run, seq_len: int) -> int:
+    if run.type == "local":
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, enc_out=None,
+               params=None):
+    """Empty ring caches sized for `seq_len` context."""
+    dt = _dt(cfg)
+    plan = build_plan(cfg)
+    hd = cfg.resolved_head_dim
+    run_caches = []
+    for run in plan:
+        if run.type == "mamba":
+            d_in, h, p, n = SSM.ssm_dims(cfg)
+            run_caches.append({
+                "state": jnp.zeros((run.count, batch, h, p, n), F32),
+                "conv_x": jnp.zeros((run.count, batch, cfg.ssm_conv - 1,
+                                     d_in), dt),
+                "conv_bc": jnp.zeros((run.count, batch, cfg.ssm_conv - 1,
+                                      2 * n), dt),
+            })
+        else:
+            cap = cache_capacity(cfg, run, seq_len)
+            c = {
+                "k": jnp.zeros((run.count, batch, cap, cfg.n_kv_heads, hd),
+                               dt),
+                "v": jnp.zeros((run.count, batch, cap, cfg.n_kv_heads, hd),
+                               dt),
+                "slot_pos": jnp.full((run.count, cap), -1, jnp.int32),
+            }
+            if cfg.n_enc_layers:
+                if params is not None and enc_out is not None:
+                    rp = params["runs"][0]
+
+                    def ckv(lp):
+                        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                       lp["cross"]["wk"].astype(dt))
+                        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                       lp["cross"]["wv"].astype(dt))
+                        return k, v
+                    c["ck"], c["cv"] = jax.vmap(ckv)(rp)
+                else:
+                    c["ck"] = jnp.zeros(
+                        (run.count, batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+                        dt)
+                    c["cv"] = jnp.zeros_like(c["ck"])
+            run_caches.append(c)
+    return {"pos": jnp.zeros((), jnp.int32), "runs": tuple(run_caches)}
+
+
+def cache_specs(cfg: ModelConfig, cache, batch_shardable: bool = True) -> Any:
+    """Logical shardings for a cache pytree: batch on data, cache-seq on
+    model (flash-decode style sequence sharding — sidesteps kv-head
+    divisibility).  When the batch can't shard (long_500k: B=1) the cache
+    seq dim shards over EVERY mesh axis instead."""
+    b_ax = sh.BATCH if batch_shardable else None
+    s_ax = sh.MODEL if batch_shardable else sh.ALL
+    # divisibility guards: MODEL axis = 16; ALL = up to 512 (2 pods)
+    s_div = sh.MODEL_PAR if batch_shardable else 512
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if name in ("k", "v", "ck", "cv"):
+            s_ok = leaf.shape[2] % s_div == 0
+            return (None, b_ax, s_ax if s_ok else None) + (None,) * (nd - 3)
+        if name == "state":
+            return (None, b_ax) + (None,) * (nd - 2)
+        if name in ("conv_x", "conv_bc"):
+            return (None, b_ax, None, None)
+        return (None,) * nd
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: Optional[int] = None):
+    """Run the prompt, return (last_logits, cache).
+
+    `max_len` sizes the global-attention caches (prompt + decode budget);
+    defaults to the prompt length, in which case continued decoding rolls
+    the ring (oldest tokens drop).  Local-window caches always ring over
+    the window — that IS sliding-window semantics."""
+    dt = _dt(cfg)
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.frontend_seq:
+        patches = batch["patches"].astype(dt)
+        patches = jnp.einsum("bpd,de->bpe", patches, params["proj"].astype(dt))
+        x = jnp.concatenate([patches, x], axis=1)
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = _encode(params, cfg, batch["frames"].astype(dt))
+    s = x.shape[1]
+    cache_len = max(max_len or s, s)
+    positions = jnp.arange(s)
+    h, kvs, _ = backbone(params, cfg, x.astype(dt), positions, enc_out,
+                         collect_kv=True)
+    last = logits_fn(params, cfg, h[:, -1:, :])[:, 0]
+    cache = init_cache(cfg, x.shape[0], cache_len, enc_out=enc_out,
+                       params=params)
+    plan = build_plan(cfg)
+    runs = list(cache["runs"])
+    for i, run in enumerate(plan):
+        rc = dict(runs[i])
+        if run.type == "mamba":
+            st, cx, cbc = kvs[i]
+            rc["state"], rc["conv_x"], rc["conv_bc"] = st, cx, cbc
+        else:
+            k, v = kvs[i]                 # [L,B,S,Hkv,D]
+            cap = cache_capacity(cfg, run, cache_len)
+            if cap <= s:                  # ring holds the newest `cap`
+                rc["k"] = k[:, :, -cap:]
+                rc["v"] = v[:, :, -cap:]
+                rc["slot_pos"] = jnp.broadcast_to(
+                    jnp.arange(s - cap, s, dtype=jnp.int32)[None],
+                    (run.count, cap))
+            else:                         # headroom for decode
+                rc["k"] = rc["k"].at[:, :, :s].set(k)
+                rc["v"] = rc["v"].at[:, :, :s].set(v)
+                sp = jnp.concatenate([
+                    jnp.arange(s, dtype=jnp.int32),
+                    jnp.full((cap - s,), -1, jnp.int32)])
+                rc["slot_pos"] = jnp.broadcast_to(sp[None], (run.count, cap))
+        runs[i] = rc
+    return last, {"pos": jnp.asarray(s, jnp.int32), "runs": tuple(runs)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token):
+    """One decode step.  token: [B,1] int32.  Returns (logits, new_cache)."""
+    pos = cache["pos"]
+    x = embed_tokens(params, cfg, token)
+    plan = build_plan(cfg)
+    new_runs = []
+    nope_global = cfg.family == "moe"
+    cross = cfg.n_enc_layers > 0
+    for i, run in enumerate(plan):
+        rc = cache["runs"][i]
+        rp = params["runs"][i]
+        if run.shared:
+            lc = {"k": rc["k"][0], "v": rc["v"][0],
+                  "slot_pos": rc["slot_pos"][0]}
+            x, nc = _decode_attn_layer_inner(
+                params["shared_attn"], x, cfg, lc, pos, run, nope_global)
+            out = dict(rc)
+            out["k"] = rc["k"].at[0].set(nc["k"])
+            out["v"] = rc["v"].at[0].set(nc["v"])
+            out["slot_pos"] = rc["slot_pos"].at[0].set(nc["slot_pos"])
+            new_runs.append(out)
+        elif run.type == "mamba":
+            def body(carry, inp):
+                lp, st, cx, cbc = inp
+                h, (st2, cx2, cbc2) = SSM.mamba_block(
+                    lp["mamba"],
+                    L.rms_norm(carry, lp["norm1"], cfg.norm_eps),
+                    cfg, state=st, conv_x_state=cx, conv_bc_state=cbc,
+                    decode=True)
+                return carry + h, (st2, cx2, cbc2)
+            x, (st2, cx2, cbc2) = lax.scan(
+                body, x, (rp, rc["state"], rc["conv_x"], rc["conv_bc"]))
+            new_runs.append({"state": st2, "conv_x": cx2, "conv_bc": cbc2})
+        else:
+            def body(carry, inp):
+                if cross:
+                    lp, k, v, sp, ck, cv = inp
+                    lc = {"k": k, "v": v, "slot_pos": sp, "ck": ck, "cv": cv}
+                else:
+                    lp, k, v, sp = inp
+                    lc = {"k": k, "v": v, "slot_pos": sp}
+                y, nc = _decode_attn_layer_inner(lp, carry, cfg, lc, pos,
+                                                 run, nope_global)
+                return y, (nc["k"], nc["v"], nc["slot_pos"])
+            xs = (rp, rc["k"], rc["v"], rc["slot_pos"])
+            if cross:
+                xs = xs + (rc["ck"], rc["cv"])
+            x, (k2, v2, sp2) = lax.scan(body, x, xs)
+            nc2 = dict(rc)
+            nc2.update({"k": k2, "v": v2, "slot_pos": sp2})
+            new_runs.append(nc2)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x)[:, 0]
+    return logits, {"pos": pos + 1, "runs": tuple(new_runs)}
+
+
+def _decode_attn_layer_inner(lp, x, cfg: ModelConfig, lc, pos, run: Run,
+                             nope_global: bool):
+    cap = lc["k"].shape[1]      # [B, cap, Hkv, D]
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    o, k_new, v_new = L.decode_attention(
+        lp["attn"], h, cfg, lc["k"], lc["v"], lc["slot_pos"], pos,
+        nope=(nope_global and run.type == "attn"),
+        window=cfg.sliding_window if run.type == "local" else 0)
+    x = x + o
+    slot = jnp.mod(pos, cap)
+    k2 = lax.dynamic_update_slice_in_dim(lc["k"], k_new[:, None], slot, 1)
+    v2 = lax.dynamic_update_slice_in_dim(lc["v"], v_new[:, None], slot, 1)
+    sp2 = lc["slot_pos"].at[slot].set(pos)
+    if "cross" in lp:
+        h = L.rms_norm(x, lp["normx"], cfg.norm_eps)
+        x = x + _decode_cross(lp["cross"], h, lc["ck"], lc["cv"], cfg)
+    y = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if "moe" in lp:
+        h, _ = MOE.moe_block(lp["moe"], y, cfg)
+    else:
+        h = L.mlp_block(lp["mlp"], y, cfg)
+    x = x + h
+    out = {"k": k2, "v": v2, "slot_pos": sp2}
+    if "ck" in lc:
+        out["ck"], out["cv"] = lc["ck"], lc["cv"]
+    return x, out
+
+
+def _decode_cross(cp, x, ck, cv, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, cp["wq"].astype(dt))
+    hq = q.shape[2]
+    o = L.direct_attention(q, L._expand_kv(ck.astype(dt), hq),
+                           L._expand_kv(cv.astype(dt), hq), None, dt)
+    return L.out_proj(cp, o, dt)

@@ -1,0 +1,205 @@
+"""Mamba2 / SSD (state-space duality) block, chunked algorithm.
+
+Train/prefill use the chunked SSD form (intra-chunk quadratic + inter-chunk
+state recurrence via lax.scan); decode is the O(1) recurrent update.
+
+TPU adaptations:
+  * chunk length 256 keeps the intra-chunk [c, c] decay matmuls MXU-shaped;
+  * projections are SEPARATE matmuls (x / BC / dt / z) instead of mamba's
+    fused in_proj, so each output dim shards cleanly on the model axis with
+    no shard-misaligned jnp.split (a fused projection's segment boundaries
+    would cross GSPMD shard boundaries and force reshard collectives);
+  * heads shard over `model` iff divisible by MODEL_PAR (zamba2: 112 heads
+    -> 7/chip; mamba2-130m: 24 heads -> replicated, data-parallel carries it).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as sh
+from repro.configs.base import ModelConfig
+
+CHUNK = 256
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """PADDED dims: SSD heads pad up to a MODEL_PAR multiple (mamba2-130m:
+    24 -> 32) so the SSD computation shards over `model` instead of
+    replicating (§Perf H3: the idle-model-axis fix).  Dead heads carry
+    zero weights end-to-end — numerically exact, pure flop padding."""
+    p = cfg.ssm_head_dim
+    h_valid = (cfg.ssm_expand * cfg.d_model) // p
+    h = sh.padded_heads(h_valid)
+    n = cfg.ssm_state
+    return h * p, h, p, n
+
+
+def ssm_valid_d_in(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in, h, p, n = ssm_dims(cfg)
+    d_valid = ssm_valid_d_in(cfg)
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d)
+    chan_mask = (jnp.arange(d_in) < d_valid).astype(jnp.float32)
+    head_mask = (jnp.arange(h) < d_valid // p).astype(jnp.float32)
+    return {
+        "w_z": sc * jax.random.normal(ks[0], (d, d_in)) * chan_mask[None],
+        "w_x": sc * jax.random.normal(ks[1], (d, d_in)) * chan_mask[None],
+        "w_bc": sc * jax.random.normal(ks[2], (d, 2 * n)),
+        "w_dt": sc * jax.random.normal(ks[3], (d, h)) * head_mask[None],
+        "conv_x": 0.1 * jax.random.normal(ks[4], (cfg.ssm_conv, d_in))
+        * chan_mask[None],
+        "conv_bc": 0.1 * jax.random.normal(ks[5], (cfg.ssm_conv, 2 * n)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jax.random.uniform(ks[6], (h,), minval=1e-3, maxval=0.1))),
+        "A_log": jnp.log(jax.random.uniform(ks[7], (h,), minval=1.0,
+                                            maxval=16.0)),
+        "D": head_mask,
+        "norm": jnp.zeros((d_in,)),
+        "w_out": (1.0 / math.sqrt(d_valid))
+        * jax.random.normal(jax.random.fold_in(key, 99), (d_in, d))
+        * chan_mask[:, None],
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, kernel K (small): x [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+               for i in range(k))
+
+
+def _segsum(a):
+    """a: [..., c] -> [..., c, c]: out[i,j] = sum_{j<k<=i} a[k]; -inf j>i."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, init_state=None):
+    """SSD scan.  x:[B,S,H,P] dt:[B,S,H] a_neg:[H] (negative),
+    bmat,cmat:[B,S,N].  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(CHUNK, s)
+    nz = s // c
+    assert nz * c == s, (s, c)
+    f32 = jnp.float32
+
+    da = dt.astype(f32) * a_neg.astype(f32)[None, None, :]      # [B,S,H] <=0
+    xz = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nz, c, h, p)
+    da = da.reshape(b, nz, c, h)
+    bz = bmat.astype(f32).reshape(b, nz, c, n)
+    cz = cmat.astype(f32).reshape(b, nz, c, n)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    seg = _segsum(jnp.moveaxis(da, -1, -2))          # [B,nz,H,c,c]
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bzin,bzjn->bzij", cz, bz)       # [B,nz,c,c]
+    y_intra = jnp.einsum("bzij,bzhij,bzjhp->bzihp", cb, decay, xz)
+
+    # --- chunk states ---
+    cum = jnp.cumsum(da, axis=2)                     # [B,nz,c,H]
+    total = cum[:, :, -1]                            # [B,nz,H]
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # [B,nz,c,H]
+    states = jnp.einsum("bzch,bzchp,bzcn->bzhpn", decay_to_end, xz, bz)
+
+    # --- inter-chunk recurrence (tiny state pass) ---
+    h0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st, tot = inp
+        new = jnp.exp(tot)[:, :, None, None] * carry + st
+        return new, carry                            # emit state *entering*
+
+    final, entering = lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)          # [B,nz,H,P,N]
+
+    y_inter = jnp.einsum("bzch,bzcn,bzhpn->bzchp", jnp.exp(cum), cz, entering)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def mamba_block(params, x, cfg: ModelConfig, state=None, conv_x_state=None,
+                conv_bc_state=None, decode: bool = False):
+    """x: [B,S,d].  Returns (y, (ssm_state, conv_x_state, conv_bc_state))."""
+    d_in, h, p, n = ssm_dims(cfg)
+    dt_ = x.dtype
+    # SP transition: x arrives seq-sharded; projections leave CHANNEL-
+    # sharded (over `model` when heads divide) with full sequence — the
+    # SSD scan runs per head-shard over the whole sequence.
+    # channel-sharded whenever the (padded) heads divide MODEL_PAR —
+    # always true for h >= 16 after ssm_dims padding (§Perf H3)
+    in_ax = sh.MODEL if h % sh.MODEL_PAR == 0 else None
+    proj_spec = (sh.BATCH, None, in_ax)
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(dt_))
+    z = sh.constrain(z, proj_spec)
+    xs_raw = jnp.einsum("bsd,de->bse", x, params["w_x"].astype(dt_))
+    xs_raw = sh.constrain(xs_raw, proj_spec)
+    bc_raw = jnp.einsum("bsd,de->bse", x, params["w_bc"].astype(dt_))
+    bc_raw = sh.constrain(bc_raw, proj_spec)
+    dt_raw = jnp.einsum("bsd,de->bse", x, params["w_dt"].astype(dt_))
+    dt_raw = sh.constrain(dt_raw, proj_spec)
+
+    k = cfg.ssm_conv
+    if decode:
+        fx = jnp.concatenate([conv_x_state.astype(dt_), xs_raw], axis=1)
+        fb = jnp.concatenate([conv_bc_state.astype(dt_), bc_raw], axis=1)
+        xs_c = _causal_conv(fx, params["conv_x"])[:, -1:]
+        bc_c = _causal_conv(fb, params["conv_bc"])[:, -1:]
+        new_cx = fx[:, -(k - 1):]
+        new_cbc = fb[:, -(k - 1):]
+    else:
+        xs_c = _causal_conv(xs_raw, params["conv_x"])
+        bc_c = _causal_conv(bc_raw, params["conv_bc"])
+        new_cx = xs_raw[:, -(k - 1):]
+        new_cbc = bc_raw[:, -(k - 1):]
+    xs_c = jax.nn.silu(xs_c)
+    bc_c = jax.nn.silu(bc_c)
+
+    bmat, cmat = jnp.split(bc_c, [n], axis=-1)
+    bsz, s, _ = xs_c.shape
+    xh = xs_c.reshape(bsz, s, h, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a_neg = -jnp.exp(params["A_log"])
+
+    if decode:
+        da = jnp.exp(dt[:, 0] * a_neg[None, :])          # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xh[:, 0].astype(jnp.float32),
+                         bmat[:, 0].astype(jnp.float32))
+        new_state = da[:, :, None, None] * state.astype(jnp.float32) + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32),
+                       new_state)
+        y = y[:, None].astype(dt_)                       # [B,1,H,P]
+        final = new_state
+    else:
+        y, final = ssd_chunked(xh, dt, a_neg, bmat, cmat, init_state=state)
+
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_in)
+    # gated RMSNorm over the VALID channels (dead padded channels are
+    # exactly zero and must not dilute the variance)
+    d_valid = ssm_valid_d_in(cfg)
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.sum(jnp.square(g), axis=-1, keepdims=True) / d_valid
+    g = g * jax.lax.rsqrt(var + cfg.norm_eps) \
+        * (1.0 + params["norm"].astype(jnp.float32))
+    y = g.astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_))
+    return out, (final, new_cx, new_cbc)

@@ -1,0 +1,159 @@
+"""jit-able step functions: train_step (loss+grad+AdamW), prefill_step,
+serve_step — plus ShapeDtypeStruct input_specs() for every assigned input
+shape (the dry-run never allocates)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.optim import adamw, cosine_schedule
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None, microbatches: int = 1):
+    """AdamW train step; with microbatches > 1 the global batch is split
+    and gradients accumulate in f32 across a lax.scan (standard grad
+    accumulation — bounds activation memory at fixed global batch)."""
+    opt = optimizer or adamw(cosine_schedule(3e-4, 100, 10_000),
+                             weight_decay=0.1)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            return M.forward_train(p, cfg, b)
+
+        if microbatches == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(leaf):
+                b = leaf.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return leaf.reshape((microbatches, b // microbatches)
+                                    + leaf.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32),
+                  "acc": jnp.zeros((), jnp.float32)}
+
+            def mb_step(carry, mb):
+                gacc, macc = carry
+                (_, mets), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                macc = {k: macc[k] + mets[k] for k in macc}
+                return (gacc, macc), 0.0
+
+            (grads, msum), _ = jax.lax.scan(mb_step, (g0, m0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {k: v / microbatches for k, v in msum.items()}
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, metrics
+
+    return opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return M.decode_step(params, cfg, cache, token)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, logical):
+    sharding = sh.named(logical, mesh) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh=None,
+                kind: Optional[str] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the data batch of `shape`."""
+    kind = kind or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, M._dt(cfg)
+    batch_ok = mesh is None or _batch_shardable(mesh, b)
+    b_ax = sh.BATCH if batch_ok else None
+
+    out: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        s_text = s - (cfg.frontend_seq or 0)
+        out["tokens"] = _sds((b, s_text), i32, mesh, (b_ax, None))
+        if kind == "train":
+            out["labels"] = _sds((b, s_text), i32, mesh, (b_ax, None))
+        if cfg.frontend_seq:
+            out["patches"] = _sds((b, cfg.frontend_seq, cfg.d_model), dt,
+                                  mesh, (b_ax, None, None))
+        if cfg.n_enc_layers:
+            out["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), dt, mesh,
+                                 (b_ax, None, None))
+    else:  # decode
+        out["token"] = _sds((b, 1), i32, mesh, (b_ax, None))
+    return out
+
+
+def _batch_shardable(mesh, b: int) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    return b % dp == 0
+
+
+def cache_shape_specs(cfg: ModelConfig, shape: InputShape, mesh=None):
+    """ShapeDtypeStructs for the decode cache at `shape` (via eval_shape —
+    no allocation), with shardings attached."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    if mesh is None:
+        return cache
+    batch_ok = _batch_shardable(mesh, b)
+    specs = M.cache_specs(cfg, cache, batch_shardable=batch_ok)
+    return jax.tree.map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=sh.named(spec, mesh)),
+        cache, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_state(cfg: ModelConfig, mesh, with_opt: bool = True,
+                   seed: int = 0):
+    """(params, opt_state) ShapeDtypeStructs with shardings — dry-run
+    inputs.  Uses eval_shape: no memory is allocated.
+
+    Training keeps f32 master weights; serving (with_opt=False) models a
+    bf16 deployment checkpoint."""
+    key = jax.random.key(seed)
+    p_shapes = jax.eval_shape(lambda k: M.init_model(k, cfg), key)
+    spec_tree = M.param_specs(cfg, p_shapes)
+    serve_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params = jax.tree.map(
+        lambda leaf, sp: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype if with_opt else serve_dt,
+            sharding=sh.named(sp, mesh)),
+        p_shapes, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if not with_opt:
+        return params, None
+    opt_state = {
+        "mu": jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.float32, sharding=l.sharding), params),
+        "nu": jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.float32, sharding=l.sharding), params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=sh.named((), mesh)),
+    }
+    return params, opt_state

@@ -1,0 +1,116 @@
+"""Minimal optax-free optimizers: AdamW, SGD(+momentum), schedules,
+global-norm clipping.  States are pytrees mirroring params so they inherit
+the same shardings."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) ->
+    #                                            (new_params, new_state)
+
+
+def constant_schedule(lr: float) -> Callable[[Any], Any]:
+    return lambda step: jnp.asarray(lr, F32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable[[Any], Any]:
+    def fn(step):
+        step = step.astype(F32) if hasattr(step, "astype") else float(step)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        t = step.astype(F32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, mu, nu):
+            g = g.astype(F32)
+            mu2 = b1 * mu + (1 - b1) * g
+            nu2 = b2 * nu + (1 - b2) * jnp.square(g)
+            mh = mu2 / c1
+            nh = nu2 / c2
+            delta = mh / (jnp.sqrt(nh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(F32)
+            p2 = p.astype(F32) - lr_t * delta
+            return p2.astype(p.dtype), mu2, nu2
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        treedef = jax.tree.structure(params)
+        flat = treedef.flatten_up_to(out)
+        new_p = treedef.unflatten([o[0] for o in flat])
+        new_mu = treedef.unflatten([o[1] for o in flat])
+        new_nu = treedef.unflatten([o[2] for o in flat])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0) -> Optimizer:
+    """Plain (S)GD — used for the paper's full-graph GD and mini-batch SGD
+    experiments (the paper's optimizer; App. N)."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum:
+            return {"vel": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, F32), params),
+                "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            vel = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(F32),
+                state["vel"], grads)
+            new_p = jax.tree.map(
+                lambda p, v: (p.astype(F32) - lr_t * v).astype(p.dtype),
+                params, vel)
+            return new_p, {"vel": vel, "step": step}
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(F32) - lr_t * g.astype(F32)).astype(
+                p.dtype), params, grads)
+        return new_p, {"step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,126 @@
+"""Logical sharding axes -> mesh PartitionSpecs.
+
+Params/activations are annotated with *logical* axis names; they resolve
+against whatever mesh is active ("data","model") or ("pod","data","model").
+The batch logical axis spans ("pod","data") on a multi-pod mesh so the global
+batch shards over every chip.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH = "batch"    # data-parallel axis (pod x data)
+MODEL = "model"    # tensor-parallel axis
+NODES = "nodes"    # GNN node-parallel axis (alias of batch axes)
+
+# Production tensor-parallel degree (the "model" axis of both meshes).
+# Head / expert / vocab dims are padded or replicated based on divisibility
+# against this constant; smoke-test meshes use model=1, which any dim divides.
+MODEL_PAR = 16
+
+
+def pad_to(n: int, m: int = MODEL_PAR) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def shard_heads(n: int) -> bool:
+    """Shard a heads-like dim over `model` only when it stays divisible."""
+    return n % MODEL_PAR == 0
+
+
+def padded_heads(n: int) -> int:
+    """Query heads are padded up to a MODEL_PAR multiple when big enough to
+    shard (llama4: 40 -> 48); small head counts (smoke configs) stay as-is
+    and replicate."""
+    if n % MODEL_PAR == 0 or n < MODEL_PAR:
+        return n
+    return pad_to(n)
+
+
+ALL = "all"        # every mesh axis (for unshardable-batch decode caches)
+FSDP = "fsdp"      # weight sharding over the data axis (ZeRO-3 style).
+#                    NOT over "pod": cross-pod traffic stays gradient-only.
+
+
+def axis_map(mesh: Mesh) -> dict:
+    names = mesh.axis_names
+    if "pod" in names:
+        batch_axes: Any = ("pod", "data")
+        all_axes: Any = ("pod", "data", "model")
+    else:
+        batch_axes = "data"
+        all_axes = ("data", "model")
+    return {BATCH: batch_axes, NODES: batch_axes, MODEL: "model",
+            ALL: all_axes, FSDP: "data"}
+
+
+def resolve(logical: Sequence[Optional[str]], mesh: Mesh) -> P:
+    m = axis_map(mesh)
+    return P(*[m.get(ax) if ax is not None else None for ax in logical])
+
+
+def named(logical: Sequence[Optional[str]], mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve(logical, mesh))
+
+
+def tree_named(spec_tree: Any, mesh: Mesh) -> Any:
+    """Map a pytree of logical-spec tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda s: named(s, mesh),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(e is None or isinstance(e, str) for e in x),
+    )
+
+
+# --- active mesh for intra-jit sharding constraints ------------------------
+# get_abstract_mesh() is empty inside jit traces in this jax version, so the
+# launcher/dry-run explicitly activates the mesh around tracing.
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+class activate(object):
+    """Context manager: `with sharding.activate(mesh): jit(...).lower(...)`
+    Makes sh.constrain() resolve logical axes during tracing (also enters
+    the legacy `with mesh:` context so bare-PartitionSpec constraints bind).
+    """
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        global _ACTIVE_MESH
+        self._prev = _ACTIVE_MESH
+        _ACTIVE_MESH = self.mesh
+        self._ctx = self.mesh
+        self._ctx.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        global _ACTIVE_MESH
+        _ACTIVE_MESH = self._prev
+        return self._ctx.__exit__(*exc)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def batch_mesh_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint against the activated mesh; no-op when no
+    mesh is active (smoke tests) or when dims don't divide (e.g. batch=1
+    decode)."""
+    if _ACTIVE_MESH is None:
+        return x
+    try:
+        spec = resolve(logical, _ACTIVE_MESH)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,20 @@
+import os
+
+# Tests see the single real CPU device (the 512-device flag belongs ONLY to
+# launch/dryrun.py).  Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.data import make_sbm_graph
+    return make_sbm_graph(n=300, n_classes=4, avg_degree=10, feat_dim=16,
+                          seed=1)

@@ -1,0 +1,33 @@
+"""The multi-pod dry-run CLI, end to end in a subprocess (it must own the
+512-device XLA flag — tests keep 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("args,tag", [
+    (["--arch", "mamba2-130m", "--shape", "decode_32k", "--single-pod"],
+     "mamba2-130m__decode_32k__16x16"),
+    (["--arch", "gnn-papers100m", "--shape", "minibatch_train",
+      "--multi-pod"],
+     "gnn-papers100m__minibatch_train__2x16x16"),
+])
+def test_dryrun_cli_compiles(tmp_path, args, tag):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args,
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{tag}.json"))
+    assert rec["status"] == "ok", rec
+    assert rec["per_device_flops"] > 0
+    assert set(rec["roofline"]) >= {"compute_s", "memory_s",
+                                    "collective_s", "dominant"}
+    assert rec["memory"]["argument_size_in_bytes"] > 0

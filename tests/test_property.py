@@ -1,0 +1,117 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import sharding as sh
+from repro.core.graph import norm_coef
+from repro.core.metrics import History, iteration_to_loss
+from repro.optim import adamw, sgd, clip_by_global_norm
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(1, 10_000), m=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_pad_to_properties(n, m):
+    p = sh.pad_to(n, m)
+    assert p >= n and p % m == 0 and p - n < m
+
+
+@given(n=st.integers(1, 512))
+@settings(**SETTINGS)
+def test_padded_heads_invariants(n):
+    p = sh.padded_heads(n)
+    assert p >= n
+    assert p % sh.MODEL_PAR == 0 or p < sh.MODEL_PAR
+    if n % sh.MODEL_PAR == 0:
+        assert p == n
+
+
+@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=30),
+       st.floats(0.001, 5.0))
+@settings(**SETTINGS)
+def test_clip_by_global_norm(vals, max_norm):
+    g = {"a": jnp.asarray(vals, jnp.float32)}
+    clipped, gn = clip_by_global_norm(g, max_norm)
+    out_norm = float(jnp.linalg.norm(clipped["a"]))
+    assert out_norm <= max_norm * (1 + 1e-4) + 1e-6
+    if float(gn) <= max_norm:                 # no-op when under the bound
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(g["a"]), rtol=1e-6)
+
+
+@given(st.floats(0.01, 0.3))
+@settings(max_examples=10, deadline=None)
+def test_sgd_matches_closed_form(lr):
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.25])}
+    opt = sgd(lr)
+    new, _ = opt.update(grads, opt.init(params), params)
+    np.testing.assert_allclose(
+        np.asarray(new["w"]),
+        np.asarray(params["w"]) - lr * np.asarray(grads["w"]), rtol=1e-6)
+
+
+def test_adamw_descends_quadratic():
+    opt = adamw(0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2.0 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 40))
+@settings(max_examples=15, deadline=None)
+def test_norm_coef_bounds(seed, deg):
+    """ã entries lie in (0, 1] and decrease with degree (paper Ã def)."""
+    from repro.data import make_sbm_graph
+    g = make_sbm_graph(n=60, n_classes=3, avg_degree=deg % 20 + 2,
+                       feat_dim=4, seed=seed % 97)
+    rows = np.repeat(np.arange(g.n), 2)[:20].astype(np.int64)
+    cols = np.roll(rows, 1)
+    w = norm_coef(g, rows, cols)
+    assert (w > 0).all() and (w <= 1.0).all()
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=50),
+       st.floats(0.0, 10.0))
+@settings(**SETTINGS)
+def test_iteration_to_loss_definition(losses, target):
+    h = History(losses=list(losses))
+    it = iteration_to_loss(h, target)
+    if it is None:
+        assert all(l > target for l in losses)
+    else:
+        assert losses[it - 1] <= target
+        assert all(l > target for l in losses[:it - 1])
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip(seed):
+    import tempfile
+    from repro.checkpoint import save_checkpoint, restore_checkpoint
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32),
+            "b": [jnp.asarray(rng.integers(0, 5, 7), jnp.int32),
+                  {"c": jnp.asarray(rng.normal(size=2), jnp.float32)}]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, seed % 7, tree)
+        back = restore_checkpoint(d, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.sampled_from(["ce", "mse"]), st.integers(2, 6))
+@settings(max_examples=8, deadline=None)
+def test_gnn_loss_nonnegative(kind, k):
+    from repro.core.gnn import gnn_loss
+    rng = np.random.default_rng(k)
+    logits = jnp.asarray(rng.normal(size=(10, k)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, k, 10), jnp.int32)
+    l = float(gnn_loss(logits, labels, kind, k))
+    assert l >= 0.0 and np.isfinite(l)

@@ -1,0 +1,126 @@
+"""End-to-end behaviour tests for the paper's system: loss-goes-down
+training on both GNN paradigms, an LM end-to-end step chain, metric
+plumbing, and the roofline/HLO analysis utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GNNConfig, get_config, INPUT_SHAPES, \
+    shape_applicable
+
+
+def test_lm_loss_decreases_over_steps():
+    """Train a reduced granite for 30 steps on Markov tokens."""
+    from repro.data import token_batches
+    from repro.models import model as M
+    from repro.models import steps as S
+    from repro.optim import adamw
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = M.init_model(jax.random.key(0), cfg)
+    opt, step = S.make_train_step(cfg, optimizer=adamw(3e-3))
+    opt_state = opt.init(params)
+    stepj = jax.jit(step)
+    losses = []
+    for i, hb in enumerate(token_batches(cfg.vocab_size, 8, 64,
+                                         n_batches=30)):
+        batch = {"tokens": jnp.asarray(hb["tokens"]),
+                 "labels": jnp.asarray(hb["labels"])}
+        params, opt_state, m = stepj(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+
+def test_gnn_full_vs_mini_comparable_accuracy(small_graph):
+    """Table-1-style check: well-tuned mini-batch is within a few points
+    of full-graph on the same graph."""
+    from repro.core.trainer import train_full_graph, train_minibatch
+    g = small_graph
+    cfg = GNNConfig(name="t", model="graphsage", n_nodes=g.n,
+                    feat_dim=g.feats.shape[1], hidden=32,
+                    n_classes=g.n_classes, n_layers=2, fanout=(5, 3),
+                    batch_size=64, loss="ce")
+    rf = train_full_graph(g, cfg, lr=0.3, n_iters=40)
+    rm = train_minibatch(g, cfg, lr=0.3, n_iters=40)
+    assert abs(rf.final_test_acc - rm.final_test_acc) < 0.15
+
+
+def test_shape_applicability_matrix():
+    """The assigned skip rules: long_500k only for sub-quadratic archs."""
+    expect_runs_long = {"mamba2-130m", "zamba2-7b", "gemma3-12b",
+                        "llama4-scout-17b-a16e",
+                        "llama4-maverick-400b-a17b"}
+    long = INPUT_SHAPES["long_500k"]
+    from repro.configs.base import list_archs
+    for arch in list_archs():
+        cfg = get_config(arch)
+        if cfg.family == "gnn":
+            continue
+        ok, why = shape_applicable(cfg, long)
+        assert ok == (arch in expect_runs_long), (arch, why)
+        # every arch runs the other three shapes
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            ok, _ = shape_applicable(cfg, INPUT_SHAPES[s])
+            assert ok
+
+
+def test_collective_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+  %p0 = f32[128,256] parameter(0)
+  %ar = f32[128,256] all-reduce(%p0), replica_groups={}
+  %ag = bf16[16,64] all-gather(%conv), dimensions={0}
+  %conv = bf16[8,64] convert(%p0)
+  %cp = f32[4] collective-permute(%small)
+  %small = f32[4] constant(0)
+"""
+    got = collective_bytes(hlo)
+    # wire model: all-reduce 2x operand; all-gather = OUTPUT bytes
+    assert got["all-reduce"] == 2 * 128 * 256 * 4
+    assert got["all-gather"] == 16 * 64 * 2
+    assert got["collective-permute"] == 16
+    assert got["total"] == sum(v for k, v in got.items() if k != "total")
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import roofline, PEAK_FLOPS, HBM_BW, ICI_BW
+    r = roofline(PEAK_FLOPS, HBM_BW * 0.5, ICI_BW * 0.25)
+    assert np.isclose(r["compute_s"], 1.0)
+    assert r["dominant"] == "compute"
+    assert np.isclose(r["compute_fraction"], 1.0)
+
+
+def test_logical_axis_resolution():
+    from repro import sharding as sh
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+    m = sh.axis_map(FakeMesh())
+    assert m[sh.BATCH] == ("pod", "data")
+    assert m[sh.FSDP] == "data"
+
+    class FakeMesh2:
+        axis_names = ("data", "model")
+    m2 = sh.axis_map(FakeMesh2())
+    assert m2[sh.BATCH] == "data"
+    assert m2[sh.ALL] == ("data", "model")
+
+
+def test_serve_chain_end_to_end():
+    from repro.models import model as M
+    cfg = get_config("stablelm-1.6b", smoke=True)
+    params = M.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)),
+                                   jnp.int32)}
+    logits, cache = M.prefill(params, cfg, batch)
+    toks = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        toks.append(tok)
+        logits, cache = M.decode_step(params, cfg, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = jnp.concatenate(toks, 1)
+    assert out.shape == (2, 4)
+    assert int(cache["pos"]) == 36

@@ -1,0 +1,66 @@
+"""The paper's iteration bounds (Thm 1, 2, B.4, D.2) and Remark 3.1/3.2
+predictions, as testable monotonicities."""
+import numpy as np
+import pytest
+
+from repro.core import theory as T
+
+
+def test_thm1_mse_batch_monotone_increasing():
+    """Remark 3.1: under MSE, more batch -> MORE iterations."""
+    ts = [T.t_mse_minibatch(1000, 8, b, 10) for b in (32, 64, 128, 256)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))
+
+
+def test_thm1_mse_fanout_monotone_decreasing():
+    ts = [T.t_mse_minibatch(1000, 8, 64, bt) for bt in (2, 5, 10, 20)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
+
+
+def test_thm2_ce_batch_monotone_decreasing():
+    """Remark 3.1: under CE, more batch -> FEWER iterations."""
+    ts = [T.t_ce_minibatch(1000, b, 10) for b in (32, 64, 128, 256)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
+
+
+def test_thm2_ce_fanout_monotone_decreasing():
+    ts = [T.t_ce_minibatch(1000, 64, bt) for bt in (2, 5, 10, 20)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
+
+
+def test_fullgraph_is_limit_of_minibatch():
+    """At b = n_train, beta = d_max the mini-batch bounds reduce to the
+    full-graph bounds (paper: 'the upper bound ... matches')."""
+    n, h, dmax, eps = 500, 4, 20, 0.1
+    mse_mini = T.t_mse_minibatch(n, h, n, dmax, eps)
+    mse_full = T.t_mse_fullgraph(n, h, dmax, eps) * n ** -1  # b^{5/2}=n^{5/2}
+    # T_mini(b=n) = n * h^2 * n^{5/2} ... = n^{7/2} h^2 / sqrt(dmax) = T_full
+    assert np.isclose(mse_mini, T.t_mse_fullgraph(n, h, dmax, eps),
+                      rtol=1e-9)
+    ce_mini = T.t_ce_minibatch(n, n, dmax, eps=eps)
+    ce_full = T.t_ce_fullgraph(n, dmax, eps=eps)
+    assert np.isclose(ce_mini, ce_full, rtol=1e-9)
+
+
+def test_remark32_slopes():
+    """|dT/dbeta| magnitudes: MSE slope grows with b, CE slope shrinks
+    with b; both shrink with beta (the 'moderate beta' advice)."""
+    assert T.slope_mse(128, 10) > T.slope_mse(32, 10)
+    assert T.slope_ce(128, 10) < T.slope_ce(32, 10)
+    assert T.slope_mse(64, 20) < T.slope_mse(64, 5)
+    assert T.slope_ce(64, 20) < T.slope_ce(64, 5)
+
+
+def test_testbed_losses(rng):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.theory import (init_testbed, make_v, testbed_ce_loss,
+                                   testbed_mse_loss)
+    w = init_testbed(jax.random.key(0), 16, 8)
+    agg = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    onehot = jax.nn.one_hot(jnp.asarray(rng.integers(0, 8, 32)), 8)
+    l1 = testbed_mse_loss(w, agg, onehot)
+    assert np.isfinite(float(l1)) and float(l1) > 0
+    y_pm = jnp.asarray(rng.choice([-1.0, 1.0], 32), jnp.float32)
+    l2 = testbed_ce_loss(w, agg, y_pm, make_v(8))
+    assert np.isfinite(float(l2)) and float(l2) > 0

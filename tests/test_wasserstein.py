@@ -1,0 +1,46 @@
+"""Theorem 3 machinery: δ_i^{full-mini}, Sinkhorn OT, Δ(β, b) trends."""
+import numpy as np
+import pytest
+
+from repro.core.wasserstein import (delta_full_mini, sinkhorn,
+                                    wasserstein_delta)
+
+
+def test_delta_full_mini_zero_at_full_fanout(small_graph):
+    g = small_graph
+    d = delta_full_mini(g, beta=g.d_max, nodes=g.train_nodes[:50])
+    np.testing.assert_allclose(d, 0.0, atol=1e-10)
+
+
+def test_delta_full_mini_decreasing_in_beta(small_graph):
+    """Thm 3: δ_i^{full-mini} has an overall non-increasing trend in β."""
+    g = small_graph
+    nodes = g.train_nodes[:80]
+    means = [delta_full_mini(g, beta=b, nodes=nodes, n_rounds=6).mean()
+             for b in (1, 2, 4, 8, g.d_max)]
+    # overall trend (allow tiny non-monotonic fluctuations, as the paper
+    # itself notes)
+    assert means[0] > means[2] > means[-1]
+    assert means[-1] < 1e-9
+
+
+def test_sinkhorn_marginals():
+    rng = np.random.default_rng(0)
+    cost = rng.random((4, 5))
+    mu = rng.dirichlet(np.ones(4))
+    nu = rng.dirichlet(np.ones(5))
+    theta, total = sinkhorn(cost, mu, nu, eps=1e-2, iters=2000)
+    np.testing.assert_allclose(theta.sum(1), mu, atol=1e-6)
+    np.testing.assert_allclose(theta.sum(0), nu, atol=1e-6)
+    assert total >= 0
+
+
+def test_wasserstein_delta_monotone(small_graph):
+    """Remark 4.1: Δ decreases as β or b grows."""
+    g = small_graph
+    d_beta = [wasserstein_delta(g, beta=b, b=64)["delta"]
+              for b in (1, 4, g.d_max)]
+    assert d_beta[0] > d_beta[1] > d_beta[2]
+    d_b = [wasserstein_delta(g, beta=4, b=bb)["delta"]
+           for bb in (16, 64, len(g.train_nodes))]
+    assert d_b[0] >= d_b[1] >= d_b[2]
