@@ -1,0 +1,11 @@
+.PHONY: check test bench-quick
+
+check:
+	bash scripts/ci.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-quick:
+	PYTHONPATH=src:. python benchmarks/bench_kernel.py --quick
+	PYTHONPATH=src:. python benchmarks/bench_sampler.py --quick

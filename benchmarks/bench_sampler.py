@@ -1,0 +1,113 @@
+"""Sampler micro-bench: seed per-node-loop sampler vs vectorized CSR
+sampler (+ the prefetch pipeline) on the seed synthetic graph presets.
+
+The paper's throughput comparison (§5, Fig. 6) charges the mini-batch
+paradigm for CPU-side sampling; this bench tracks the speedup of the
+batched-index-arithmetic sampler over the seed per-node `rng.choice`
+loop (target: >= 20x) and the prefetcher's overlap win.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import print_rows, write_csv
+from repro.core.prefetch import Prefetcher
+from repro.core.sampler import (expand_batch, sample_batch,
+                                sample_neighbors, sample_neighbors_loop)
+from repro.data import make_preset
+
+
+def _time_pair(fn_a, fn_b, reps, warmup=1):
+    """Best-of-reps for two competitors, INTERLEAVED so slow drift in
+    machine load hits both sides equally instead of biasing the ratio."""
+    for _ in range(warmup):
+        fn_a()
+        fn_b()
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def run(quick: bool = True, seed: int = 0):
+    cases = [("arxiv-like", 512, (15, 10)),
+             ("products-like", 512, (15, 10)),
+             ("papers-like", 512, (15, 10)),
+             ("reddit-like", 512, (15, 10))]
+    if quick:
+        cases = [("arxiv-like", 512, (15, 10)),
+                 ("papers-like", 512, (15, 10))]
+    reps = 5 if quick else 7
+    rows = []
+    for preset, b, fanouts in cases:
+        graph = make_preset(preset, seed=seed)
+        rng = np.random.default_rng(seed)
+        targets = rng.choice(graph.train_nodes, size=min(
+            b, len(graph.train_nodes)), replace=False).astype(np.int32)
+
+        # --- the replaced component: per-hop neighbor sampling over the
+        # fan-out tree frontiers (hop d samples b*f1*...*fd source nodes)
+        frontiers = [targets]
+        r0 = np.random.default_rng(seed + 1)
+        for beta in fanouts[:-1]:
+            nb, _ = sample_neighbors(r0, graph, frontiers[-1], beta)
+            frontiers.append(nb)
+
+        def sample_all(sampler):
+            r = np.random.default_rng(seed + 2)
+            for beta, fr in zip(fanouts, frontiers):
+                sampler(r, graph, fr, beta)
+
+        t_loop, t_vec = _time_pair(
+            lambda: sample_all(sample_neighbors_loop),
+            lambda: sample_all(sample_neighbors), reps)
+
+        # --- end-to-end batch expansion (adds the ã-weight computation,
+        # identical in both paths) for context
+        def expand(sampler):
+            expand_batch(np.random.default_rng(seed + 1), graph, targets,
+                         fanouts, neighbor_sampler=sampler)
+
+        t_exp_loop, t_exp_vec = _time_pair(
+            lambda: expand(sample_neighbors_loop),
+            lambda: expand(sample_neighbors), reps)
+
+        # prefetch pipeline: batches/s with the host work on a thread
+        n_batches = 6 if quick else 12
+        with Prefetcher(graph, b, fanouts, seed=seed,
+                        n_batches=n_batches) as pf:
+            pf.next()                       # warm the pipeline
+            t0 = time.perf_counter()
+            got = 1
+            for _ in range(n_batches - 1):
+                pf.next()
+                got += 1
+            t_pf = (time.perf_counter() - t0) / max(got - 1, 1)
+
+        rows.append({
+            "preset": preset, "b": b, "fanouts": "x".join(map(str, fanouts)),
+            "loop_ms": round(t_loop * 1e3, 2),
+            "vec_ms": round(t_vec * 1e3, 2),
+            "speedup": round(t_loop / t_vec, 1),
+            "expand_loop_ms": round(t_exp_loop * 1e3, 2),
+            "expand_vec_ms": round(t_exp_vec * 1e3, 2),
+            "expand_speedup": round(t_exp_loop / t_exp_vec, 1),
+            "prefetch_batch_ms": round(t_pf * 1e3, 2),
+        })
+    write_csv("sampler_microbench", rows)
+    print_rows("sampler", rows)
+    worst = min(r["speedup"] for r in rows)
+    print(f"sampler,min_speedup={worst}x (target >= 20x)", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

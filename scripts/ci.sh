@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Per-PR check: tier-1 tests + quick perf benches so sampler/kernel
+# regressions are visible in the PR log.  Run from the repo root
+# (or via `make check`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== kernel micro-bench (quick) =="
+python benchmarks/bench_kernel.py --quick
+
+echo "== sampler micro-bench (quick) =="
+python benchmarks/bench_sampler.py --quick

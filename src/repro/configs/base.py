@@ -137,6 +137,15 @@ class GNNConfig:
     gat_heads: int = 4
     dtype: str = "float32"
     loss: str = "ce"                     # ce | mse
+    # --- Pallas neighbor-aggregation kernel (kernels/neighbor_agg) ---
+    # Routes the Ã-weighted aggregation of gcn/graphsage through the
+    # batch-tiled software-gather kernel in BOTH forward paths.  GAT keeps
+    # the einsum path (per-edge softmax attention is not a weighted sum).
+    use_agg_kernel: bool = False
+    agg_interpret: bool = True           # interpret mode on CPU; False on TPU
+    agg_b_tile: int = 8
+    agg_d_tile: int = 128
+    agg_k_slab: int = 4
     source: str = ""
 
     @property

@@ -58,16 +58,41 @@ def init_gnn(key, cfg: GNNConfig, feat_dim: int) -> List[Dict[str, Any]]:
 # layer primitives (shared by both paths)
 # ---------------------------------------------------------------------------
 
-def _gcn_layer(p, h_self, h_nb, w_edge, w_self):
+def _kernel_agg(cfg: GNNConfig, table, idx, w):
+    """Σ_k w[b,k] · table[idx[b,k]] via the batch-tiled Pallas kernel."""
+    from repro.kernels.neighbor_agg.ops import neighbor_agg
+    return neighbor_agg(table, idx, w, use_kernel=True, kernel="tiled",
+                        interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
+                        d_tile=cfg.agg_d_tile, k_slab=cfg.agg_k_slab)
+
+
+def _wsum(cfg: GNNConfig, w_edge, h_nb):
+    """Weighted neighbor sum over ALREADY-GATHERED features:
+    out[..., :] = Σ_k w_edge[..., k] * h_nb[..., k, :].
+
+    With cfg.use_agg_kernel the fan-out tree is flattened to a [B*K, d]
+    table + identity ids so the mini-batch path exercises the same tiled
+    kernel (zero-weight padding edges stay exact)."""
+    if not cfg.use_agg_kernel:
+        return jnp.einsum("...k,...kd->...d", w_edge, h_nb)
+    k, d = h_nb.shape[-2], h_nb.shape[-1]
+    lead = h_nb.shape[:-2]
+    table = h_nb.reshape(-1, d)
+    b = table.shape[0] // k
+    idx = jnp.arange(b * k, dtype=jnp.int32).reshape(b, k)
+    out = _kernel_agg(cfg, table, idx, w_edge.reshape(b, k))
+    return out.reshape(lead + (d,))
+
+
+def _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self):
     """h_self [..., d]; h_nb [..., K, d]; w_edge [..., K]; w_self [...]."""
-    agg = jnp.einsum("...k,...kd->...d", w_edge, h_nb) \
-        + w_self[..., None] * h_self
+    agg = _wsum(cfg, w_edge, h_nb) + w_self[..., None] * h_self
     return agg @ p["w"]
 
 
-def _sage_layer(p, h_self, h_nb, mask):
+def _sage_layer(cfg, p, h_self, h_nb, mask):
     cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
-    mean = jnp.einsum("...k,...kd->...d", mask, h_nb) / cnt
+    mean = _wsum(cfg, mask, h_nb) / cnt
     return h_self @ p["w_self"] + mean @ p["w_neigh"]
 
 
@@ -91,9 +116,9 @@ def _gat_layer(p, h_self, h_nb, mask):
 def _apply_layer(cfg: GNNConfig, p, h_self, h_nb, mask, w_edge, w_self,
                  last: bool):
     if cfg.model == "gcn":
-        out = _gcn_layer(p, h_self, h_nb, w_edge, w_self)
+        out = _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self)
     elif cfg.model == "graphsage":
-        out = _sage_layer(p, h_self, h_nb, mask)
+        out = _sage_layer(cfg, p, h_self, h_nb, mask)
     else:
         out = _gat_layer(p, h_self, h_nb, mask)
         if last:  # average heads into class logits
@@ -120,6 +145,12 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
         rows;
       * aggregation traffic runs in cfg.dtype (bf16 at production scale).
     All three are exact (up to float associativity).
+
+    With cfg.use_agg_kernel the gcn/graphsage Ã-aggregation runs through
+    the batch-tiled Pallas software-gather kernel on the replicated
+    source table — no [n, K, d] gather is materialized (the kernel DMAs
+    rows tile-by-tile and keeps the (b_tile, d_tile) accumulator in
+    VMEM).  GAT keeps the einsum path (per-edge softmax attention).
     """
     from repro import sharding as sh
 
@@ -128,9 +159,19 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
     agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
     n_layers = len(params)
 
+    def replicate(src):
+        return sh.constrain(src.astype(agg_dt), (None, None))
+
     def gather(src):
-        src = sh.constrain(src.astype(agg_dt), (None, None))  # replicate
-        return jnp.take(src, ell_idx, axis=0)                 # local gather
+        return jnp.take(replicate(src), ell_idx, axis=0)      # local gather
+
+    def agg_w(src, w_edge):
+        """Σ_k w_edge[n,k] · src[ell_idx[n,k]] without the [n,K,d] blowup."""
+        if cfg.use_agg_kernel:
+            return _kernel_agg(cfg, replicate(src), ell_idx,
+                               w_edge.astype(agg_dt)).astype(h.dtype)
+        return jnp.einsum("nk,nkd->nd", w_edge.astype(agg_dt),
+                          gather(src)).astype(h.dtype)
 
     for li, p in enumerate(params):
         last = li == n_layers - 1
@@ -138,18 +179,14 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
             w = p["w"]
             pre = w.shape[1] < h.shape[1]
             src = (h @ w) if pre else h
-            nb = gather(src)
-            agg = (jnp.einsum("nk,nkd->nd", ell_w.astype(agg_dt), nb)
-                   .astype(h.dtype) + w_self[:, None] * src)
+            agg = agg_w(src, ell_w) + w_self[:, None] * src
             out = agg if pre else agg @ w
         elif cfg.model == "graphsage":
             wn = p["w_neigh"]
             pre = wn.shape[1] < h.shape[1]
             src = (h @ wn) if pre else h
-            nb = gather(src)
             cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
-            mean = (jnp.einsum("nk,nkd->nd", mask.astype(agg_dt), nb)
-                    .astype(h.dtype) / cnt)
+            mean = agg_w(src, mask) / cnt
             out = h @ p["w_self"] + (mean if pre else mean @ wn)
         else:  # gat — gathers the (usually narrower) projected z already
             nb = gather(h).astype(h.dtype)

@@ -20,6 +20,7 @@ from repro.configs.base import GNNConfig
 from repro.core import gnn as G
 from repro.core.graph import Graph, to_ell
 from repro.core.metrics import History
+from repro.core.prefetch import Prefetcher
 from repro.core.sampler import FanoutBatch, expand_batch, gather_features, \
     sample_batch
 from repro.optim import sgd
@@ -33,9 +34,21 @@ class TrainResult:
 
 
 def _device_ell(graph: Graph, max_deg: Optional[int] = None):
-    idx, w, w_self = to_ell(graph, max_deg=max_deg)
-    return (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(w_self),
-            jnp.asarray(graph.feats), jnp.asarray(graph.labels))
+    """Device-resident ELL layout, memoized per graph: evaluation and the
+    full-loss tracker used to rebuild (re-pad + re-upload) it on every
+    call.  The cache lives on the Graph instance so it dies with it."""
+    key = int(max_deg or graph.d_max)
+    cache = getattr(graph, "_ell_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(graph, "_ell_cache", cache)
+    if "base" not in cache:                  # max_deg-independent uploads
+        cache["base"] = (jnp.asarray(graph.feats),
+                         jnp.asarray(graph.labels))
+    if key not in cache:
+        idx, w, w_self = to_ell(graph, max_deg=max_deg)
+        cache[key] = (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(w_self))
+    return cache[key] + cache["base"]
 
 
 def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes
@@ -88,8 +101,12 @@ def train_full_graph(graph: Graph, cfg: GNNConfig, lr: float,
     return TrainResult(params, hist, acc)
 
 
-def _batch_to_device(graph: Graph, batch: FanoutBatch):
-    feats = [jnp.asarray(f) for f in gather_features(graph, batch)]
+def _batch_to_device(graph: Graph, batch: FanoutBatch, host_feats=None):
+    """host_feats: pre-gathered hop features (from the Prefetcher thread);
+    gathered inline when absent."""
+    if host_feats is None:
+        host_feats = gather_features(graph, batch)
+    feats = [jnp.asarray(f) for f in host_feats]
     masks = [jnp.asarray(m.astype(np.float32)) for m in batch.masks]
     weights = [jnp.asarray(wt) for wt in batch.weights]
     self_w = [jnp.asarray(s) for s in batch.self_w]
@@ -101,9 +118,12 @@ def train_minibatch(graph: Graph, cfg: GNNConfig, lr: float, n_iters: int,
                     fanouts: Optional[Sequence[int]] = None,
                     eval_every: int = 10, seed: int = 0,
                     target_loss: Optional[float] = None,
-                    track_full_loss_every: int = 0) -> TrainResult:
+                    track_full_loss_every: int = 0,
+                    prefetch: bool = True) -> TrainResult:
     """Paper's mini-batch paradigm: per-iteration (b, β) sampling + SGD.
-    Host-side sampling emulates the CPU-side loaders of DGL/PyG."""
+    Host-side sampling emulates the CPU-side loaders of DGL/PyG; with
+    `prefetch` it runs on a background thread, double-buffered ahead of
+    the device step (same batch sequence as the synchronous path)."""
     b = batch_size or cfg.batch_size
     fanouts = tuple(fanouts or cfg.fanout)
     assert len(fanouts) == cfg.n_layers
@@ -134,29 +154,45 @@ def train_minibatch(graph: Graph, cfg: GNNConfig, lr: float, n_iters: int,
         return G.gnn_loss(logits[train_sel], labels_e[train_sel], cfg.loss,
                           cfg.n_classes)
 
+    pf = (Prefetcher(graph, b, fanouts, seed=seed, n_batches=n_iters)
+          if prefetch else None)
     hist = History()
     hist.start()
-    for it in range(n_iters):
-        fb = sample_batch(rng, graph, b, fanouts)
-        feats, masks, weights, self_w, labels = _batch_to_device(graph, fb)
-        params, opt_state, loss = step(params, opt_state, feats, masks,
-                                       weights, self_w, labels)
-        val = (evaluate_full(params, cfg, graph, ell, graph.val_nodes)
-               if it % eval_every == 0 else None)
-        hist.record(float(loss), val, nodes=fb.batch_size)
-        if track_full_loss_every and it % track_full_loss_every == 0:
-            hist.full_losses.append(float(full_loss(params)))
-            hist.full_loss_iters.append(it + 1)
-        if target_loss is not None and float(loss) <= target_loss:
-            break
+    try:
+        for it in range(n_iters):
+            if pf is not None:
+                fb, host_feats = pf.next()
+            else:
+                fb = sample_batch(rng, graph, b, fanouts)
+                host_feats = None
+            feats, masks, weights, self_w, labels = _batch_to_device(
+                graph, fb, host_feats)
+            params, opt_state, loss = step(params, opt_state, feats, masks,
+                                           weights, self_w, labels)
+            val = (evaluate_full(params, cfg, graph, ell, graph.val_nodes)
+                   if it % eval_every == 0 else None)
+            hist.record(float(loss), val, nodes=fb.batch_size)
+            if track_full_loss_every and it % track_full_loss_every == 0:
+                hist.full_losses.append(float(full_loss(params)))
+                hist.full_loss_iters.append(it + 1)
+            if target_loss is not None and float(loss) <= target_loss:
+                break
+    finally:
+        if pf is not None:
+            pf.close()
     acc = evaluate_full(params, cfg, graph, ell, graph.test_nodes)
     return TrainResult(params, hist, acc)
 
 
-def full_graph_train_loss(graph: Graph, params, cfg: GNNConfig) -> float:
+def full_graph_train_loss(graph: Graph, params, cfg: GNNConfig,
+                          ell=None) -> float:
     """Loss of the CURRENT params on the full training set — the paper
-    evaluates mini-batch convergence against the full-graph objective."""
-    ell = _device_ell(graph)
+    evaluates mini-batch convergence against the full-graph objective.
+    `_device_ell` memoizes per graph, so repeated calls (every
+    `track_full_loss_every` iterations) no longer rebuild the ELL;
+    callers holding a prebuilt ELL can pass it directly."""
+    if ell is None:
+        ell = _device_ell(graph)
     idx, w, w_self, feats, labels = ell
     logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
     sel = jnp.asarray(graph.train_nodes)

@@ -1,17 +1,34 @@
-"""Pallas TPU kernel: weighted neighbor aggregation (software gather).
+"""Pallas TPU kernels: weighted neighbor aggregation (software gather).
 
 TPU adaptation of the GNN gather hot-spot (DESIGN.md §3): TPUs have no
 hardware gather from HBM, so the neighbor ids are SCALAR-PREFETCHED and
-drive the feature BlockSpec's index_map — each grid step DMAs exactly one
-needed feature row tile HBM->VMEM and accumulates
+drive per-row DMAs — each grid step moves exactly the feature rows it
+needs HBM->VMEM and accumulates
 
     out[b, d_tile] += w[b, k] * feats[idx[b, k], d_tile]
 
 into a revisited output block (grid order puts k innermost so the output
 tile stays resident in VMEM across the K accumulation steps).
 
-Grid: (B, D // d_tile, K).  VMEM working set per step:
-one feature row tile (d_tile) + one output tile (d_tile) + scalar weight.
+Two variants:
+
+* `neighbor_agg_pallas` — the seed row kernel: one (1, d_tile) feature
+  row per grid step, grid (B, D // d_tile, K).  Kept as the simple
+  reference shape; every step pays one DMA issue + one weight-block load
+  for a single accumulated row.
+
+* `neighbor_agg_pallas_tiled` — batch-tiled: each grid step owns a
+  (b_tile, d_tile) OUTPUT block and a K-slab of k_slab neighbors, grid
+  (B // b_tile, D // d_tile, K // k_slab).  The b_tile * k_slab row DMAs
+  of a step are issued together (overlapped in hardware), the weight
+  block (b_tile, k_slab) is loaded once per step instead of once per
+  (row, k) pair, and the accumulator tile amortizes its init/flush over
+  b_tile rows.  Zero-weight padding rows DMA like any other row but
+  contribute exactly 0, so masked/padded inputs stay exact.
+
+VMEM working set per tiled step:
+rows (k_slab, b_tile, d_tile) + acc (b_tile, d_tile) + weights
+(b_tile, k_slab) — keep b_tile * d_tile * (k_slab + 1) * 4B under ~2 MB.
 """
 from __future__ import annotations
 
@@ -22,8 +39,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; the
+# seed pinned the new name and broke on the baked-in jax (0.4.37)
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) \
+    or getattr(pltpu, "CompilerParams")
 
-def _kernel(idx_ref, w_ref, feat_ref, out_ref, acc_ref):
+
+# ---------------------------------------------------------------------------
+# seed row kernel: one feature row tile per grid step
+# ---------------------------------------------------------------------------
+
+def _row_kernel(idx_ref, w_ref, feat_ref, out_ref, acc_ref):
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -70,11 +96,98 @@ def neighbor_agg_pallas(feats, idx, w, *, d_tile: int = 128,
         scratch_shapes=[pltpu.VMEM((1, d_tile), jnp.float32)],
     )
     fn = pl.pallas_call(
-        _kernel,
+        _row_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), feats.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )
     return fn(flat_idx, w, feats)
+
+
+# ---------------------------------------------------------------------------
+# batch-tiled kernel: (b_tile, d_tile) output block, K-slab per step
+# ---------------------------------------------------------------------------
+
+def _make_tiled_kernel(b_tile: int, d_tile: int, k_slab: int, k_total: int):
+    def kernel(idx_ref, w_ref, feat_ref, out_ref, rows_ref, acc_ref, sems):
+        bi = pl.program_id(0)
+        di = pl.program_id(1)
+        ki = pl.program_id(2)
+        nk = pl.num_programs(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # issue all b_tile * k_slab row DMAs up front (software gather:
+        # the scalar-prefetched ids address HBM rows directly), then wait
+        dmas = []
+        for j in range(k_slab):
+            for i in range(b_tile):
+                nid = idx_ref[(bi * b_tile + i) * k_total + ki * k_slab + j]
+                dma = pltpu.make_async_copy(
+                    feat_ref.at[nid, pl.ds(di * d_tile, d_tile)],
+                    rows_ref.at[j, i, :],
+                    sems.at[j, i])
+                dma.start()
+                dmas.append(dma)
+        for dma in dmas:
+            dma.wait()
+
+        w_blk = w_ref[...].astype(jnp.float32)        # [b_tile, k_slab]
+        for j in range(k_slab):
+            acc_ref[...] += w_blk[:, j:j + 1] \
+                * rows_ref[j].astype(jnp.float32)
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+    return kernel
+
+
+def neighbor_agg_pallas_tiled(feats, idx, w, *, b_tile: int = 8,
+                              d_tile: int = 128, k_slab: int = 4,
+                              interpret: bool = True):
+    """Batch-tiled software gather: feats [N, D]; idx [B, K] int32;
+    w [B, K] (0 ⇒ padding edge, exact).  Returns [B, D].
+
+    B % b_tile == 0, D % d_tile == 0, K % k_slab == 0 (ops.py pads all
+    three; padded rows/edges carry zero weight).
+    """
+    n, d = feats.shape
+    b, k = idx.shape
+    assert b % b_tile == 0, (b, b_tile)
+    assert d % d_tile == 0, (d, d_tile)
+    assert k % k_slab == 0, (k, k_slab)
+    grid = (b // b_tile, d // d_tile, k // k_slab)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # the (b_tile, k_slab) weight block — ONE load per grid step
+            pl.BlockSpec((b_tile, k_slab),
+                         lambda bi, di, ki, idx_p: (bi, ki)),
+            # full feature table stays in HBM; rows are DMA'd manually
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((b_tile, d_tile),
+                               lambda bi, di, ki, idx_p: (bi, di)),
+        scratch_shapes=[
+            pltpu.VMEM((k_slab, b_tile, d_tile), feats.dtype),
+            pltpu.VMEM((b_tile, d_tile), jnp.float32),
+            pltpu.SemaphoreType.DMA((k_slab, b_tile)),
+        ],
+    )
+    fn = pl.pallas_call(
+        _make_tiled_kernel(b_tile, d_tile, k_slab, k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), feats.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )
+    return fn(idx.reshape(-1), w, feats)

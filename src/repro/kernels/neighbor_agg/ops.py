@@ -1,33 +1,106 @@
-"""jit'd public wrapper for the neighbor-aggregation kernel.
+"""jit'd public wrapper for the neighbor-aggregation kernels.
 
-Handles D-padding to the VMEM lane tile, dtype plumbing, and the kernel /
-pure-jnp dispatch (the jnp path is what the 512-device dry-run lowers; the
-Pallas path targets real TPUs and is validated in interpret mode)."""
+Handles B/D/K padding to the kernel tile shape, dtype plumbing, the
+kernel / pure-jnp dispatch (the jnp path is what the 512-device dry-run
+lowers; the Pallas path targets real TPUs and is validated in interpret
+mode), and a custom VJP so BOTH training paths (full-graph GD and
+mini-batch SGD) can differentiate through the kernel:
+
+    d/dfeats = scatter-add of w[b,k] * g[b]   (segment-sum over idx)
+    d/dw     = <g[b], feats[idx[b,k]]>
+
+Padding is with zero-weight edges pointing at row 0, which the kernels
+treat exactly (0 * row == 0)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.neighbor_agg.neighbor_agg import neighbor_agg_pallas
+from repro.kernels.neighbor_agg.neighbor_agg import (
+    neighbor_agg_pallas, neighbor_agg_pallas_tiled)
 from repro.kernels.neighbor_agg.ref import neighbor_agg_ref
 
 
+def _run_kernel(feats, idx, w, static):
+    kernel, interpret, d_tile, b_tile, k_slab = static
+    if kernel == "row":
+        return neighbor_agg_pallas(feats, idx, w, d_tile=d_tile,
+                                   interpret=interpret)
+    return neighbor_agg_pallas_tiled(feats, idx, w, b_tile=b_tile,
+                                     d_tile=d_tile, k_slab=k_slab,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _agg(feats, idx, w, static):
+    return _run_kernel(feats, idx, w, static)
+
+
+def _agg_fwd(feats, idx, w, static):
+    return _run_kernel(feats, idx, w, static), (feats, idx, w)
+
+
+def _agg_bwd(static, res, g):
+    # scan over the K axis so the backward's peak memory is O(N*D + B*D),
+    # matching the forward kernel's no-[B,K,D]-blowup property instead of
+    # materializing the full gather it exists to avoid
+    feats, idx, w = res
+    g32 = g.astype(jnp.float32)                       # [B, D]
+
+    def body(dfeats, xs):
+        idx_k, w_k = xs                               # [B], [B]
+        rows = jnp.take(feats, idx_k, axis=0).astype(jnp.float32)
+        dw_k = jnp.einsum("bd,bd->b", g32, rows)
+        dfeats = dfeats.at[idx_k].add(
+            w_k.astype(jnp.float32)[:, None] * g32)
+        return dfeats, dw_k
+
+    dfeats, dw_t = jax.lax.scan(
+        body, jnp.zeros(feats.shape, jnp.float32), (idx.T, w.T))
+    dfeats = dfeats.astype(feats.dtype)
+    dw = dw_t.T.astype(w.dtype)
+    didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
+    return dfeats, didx, dw
+
+
+_agg.defvjp(_agg_fwd, _agg_bwd)
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
-                                             "d_tile"))
+                                             "kernel", "d_tile", "b_tile",
+                                             "k_slab"))
 def neighbor_agg(feats, idx, w, *, use_kernel: bool = False,
-                 interpret: bool = True, d_tile: int = 128):
+                 interpret: bool = True, kernel: str = "tiled",
+                 d_tile: int = 128, b_tile: int = 8, k_slab: int = 4):
     """out[b] = Σ_k w[b,k] · feats[idx[b,k]].
 
     feats [N, D]; idx [B, K] int32; w [B, K] (0 ⇒ padding edge).
+    kernel: "tiled" (batch-tiled, production) | "row" (seed reference).
+    Differentiable wrt feats and w in both dispatch modes.
     """
+    assert kernel in ("row", "tiled"), kernel
     if not use_kernel:
         return neighbor_agg_ref(feats, idx, w)
-    n, d = feats.shape
-    pad = (-d) % d_tile
-    if pad:
-        feats = jnp.pad(feats, ((0, 0), (0, pad)))
-    out = neighbor_agg_pallas(feats, idx, w, d_tile=d_tile,
-                              interpret=interpret)
-    return out[:, :d] if pad else out
+    b, k = idx.shape
+    d = feats.shape[1]
+    feats_p = _pad_to(feats, 1, d_tile)
+    if kernel == "tiled":
+        idx_p = _pad_to(_pad_to(idx, 0, b_tile), 1, k_slab)
+        w_p = _pad_to(_pad_to(w, 0, b_tile), 1, k_slab)
+    else:
+        idx_p, w_p = idx, w
+    static = (kernel, interpret, d_tile, b_tile, k_slab)
+    out = _agg(feats_p, idx_p, w_p, static)
+    return out[:b, :d]

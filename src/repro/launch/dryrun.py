@@ -1,5 +1,9 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# the dry-run compiles against 512 VIRTUAL HOST devices by design; pin the
+# cpu platform (unless the caller overrides) so a baked-in libtpu never
+# hijacks backend discovery and hangs probing for real hardware
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 """Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
 
@@ -57,6 +61,8 @@ def _mem_dict(ma) -> Dict[str, int]:
 def _finish(lowered, t0, extra: Dict[str, Any]) -> Dict[str, Any]:
     compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # jax <= 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     mem = _mem_dict(ma)
     hlo = compiled.as_text()

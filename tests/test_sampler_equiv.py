@@ -1,0 +1,209 @@
+"""Equivalence of the vectorized CSR sampler with the seed per-node-loop
+sampler (same DGL semantics), the prefetch pipeline, and the batch-tiled
+kernel path of both GNN forwards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GNNConfig
+from repro.core import gnn as G
+from repro.core.graph import neighbors_batch, to_ell
+from repro.core.prefetch import Prefetcher
+from repro.core.sampler import (expand_batch, gather_features,
+                                sample_neighbors, sample_neighbors_loop)
+from repro.core.trainer import train_minibatch
+
+
+# ---------------------------------------------------------------------------
+# vectorized sampler == loop sampler semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fanout", [1, 3, 8, 64])
+def test_vectorized_sampler_semantics(small_graph, fanout):
+    """Without-replacement; degree <= β keeps ALL neighbors; sampled ids
+    are real neighbors; mask counts == min(deg, β) — identical semantics
+    to `sample_neighbors_loop`."""
+    g = small_graph
+    rng = np.random.default_rng(5)
+    src = rng.choice(g.n, size=256).astype(np.int32)
+    nb, mk = sample_neighbors(rng, g, src, fanout)
+    deg = g.degrees[src]
+    assert nb.shape == (256, fanout) and mk.shape == (256, fanout)
+    np.testing.assert_array_equal(mk.sum(-1), np.minimum(deg, fanout))
+    for i, u in enumerate(src):
+        real = set(g.neighbors(int(u)).tolist())
+        sel = nb[i][mk[i]].tolist()
+        assert len(set(sel)) == len(sel)             # without replacement
+        assert set(sel) <= real                      # real neighbors only
+        if deg[i] <= fanout:                         # keep-all regime
+            assert set(sel) == real
+
+
+def test_vectorized_sampler_respects_tree_shape(small_graph):
+    g = small_graph
+    rng = np.random.default_rng(5)
+    src = rng.choice(g.n, size=(16, 5)).astype(np.int32)
+    nb, mk = sample_neighbors(rng, g, src, 3)
+    assert nb.shape == (16, 5, 3) and mk.shape == (16, 5, 3)
+
+
+def test_expand_batch_weights_match_loop_sampler(small_graph):
+    """ã^mini weights depend only on (mask, sampled-degree), so the two
+    samplers produce identical weight STATISTICS: zero exactly on padding
+    and w = 1/sqrt((D_in^mini+1)(d_out+1)) on sampled edges."""
+    g = small_graph
+    targets = g.train_nodes[:64]
+    for sampler in (sample_neighbors, sample_neighbors_loop):
+        fb = expand_batch(np.random.default_rng(0), g, targets, (5, 3),
+                          neighbor_sampler=sampler)
+        for d, (mk, w, nb) in enumerate(zip(fb.masks, fb.weights,
+                                            fb.nodes[1:])):
+            assert ((w > 0) == mk).all()
+            samp_deg = mk.sum(-1, keepdims=True).astype(np.float32)
+            rows = np.broadcast_to(samp_deg, nb.shape)
+            expect = (1.0 / np.sqrt((rows + 1.0)
+                                    * (g.degrees[nb] + 1.0))
+                      ).astype(np.float32)
+            np.testing.assert_allclose(w[mk], expect[mk], rtol=1e-5)
+
+
+def test_sampler_uniformity(small_graph):
+    """Each neighbor of a deg-d node appears with frequency ~ β/d."""
+    g = small_graph
+    u = int(np.argmax(g.degrees))
+    deg = int(g.degrees[u])
+    fanout = max(deg // 4, 2)
+    counts = {int(v): 0 for v in g.neighbors(u)}
+    rng = np.random.default_rng(11)
+    trials = 3000
+    for _ in range(trials):
+        nb, mk = sample_neighbors(rng, g, np.array([u], np.int32), fanout)
+        for v in nb[0][mk[0]]:
+            counts[int(v)] += 1
+    freq = np.array(list(counts.values()), np.float64)
+    expect = trials * fanout / deg
+    assert np.abs(freq - expect).max() < 0.25 * expect
+
+
+def test_edgeless_graph_matches_loop_sampler():
+    """Zero-edge graph: both samplers (and to_ell) must return all-padding
+    instead of crashing on the empty CSR indices array."""
+    from repro.core.graph import Graph
+    n = 8
+    g = Graph(n=n, indptr=np.zeros(n + 1, np.int64),
+              indices=np.zeros(0, np.int32),
+              feats=np.zeros((n, 4), np.float32),
+              labels=np.zeros(n, np.int32),
+              train_mask=np.ones(n, bool), val_mask=np.zeros(n, bool),
+              test_mask=np.zeros(n, bool))
+    src = np.arange(n, dtype=np.int32)
+    rng = np.random.default_rng(0)
+    nb_v, mk_v = sample_neighbors(rng, g, src, 3)
+    nb_l, mk_l = sample_neighbors_loop(rng, g, src, 3)
+    np.testing.assert_array_equal(nb_v, nb_l)
+    np.testing.assert_array_equal(mk_v, mk_l)
+    assert not mk_v.any()
+    idx, w, w_self = to_ell(g, max_deg=2)
+    assert (w == 0).all() and (idx == 0).all()
+
+
+def test_neighbors_batch_matches_csr(small_graph):
+    g = small_graph
+    rows = np.arange(0, g.n, 7, dtype=np.int64)
+    nb, valid = neighbors_batch(g, rows)
+    for i, u in enumerate(rows):
+        np.testing.assert_array_equal(nb[i][valid[i]], g.neighbors(int(u)))
+
+
+# ---------------------------------------------------------------------------
+# prefetch pipeline
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_reproduces_sync_batches(small_graph):
+    """The background pipeline must consume the SAME rng stream as the
+    synchronous sample-in-the-loop path (bitwise-identical batches)."""
+    g = small_graph
+    from repro.core.sampler import sample_batch
+    rng = np.random.default_rng(9)
+    want = [sample_batch(rng, g, 32, (5, 3)) for _ in range(4)]
+    with Prefetcher(g, 32, (5, 3), seed=9, n_batches=4) as pf:
+        got = [pf.next() for _ in range(4)]
+        with pytest.raises(StopIteration):
+            pf.next()
+    for (fb, feats), ref in zip(got, want):
+        for a, b in zip(fb.nodes, ref.nodes):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(fb.weights, ref.weights):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(fb.labels, ref.labels)
+        for f, ids in zip(feats, ref.nodes):
+            np.testing.assert_array_equal(
+                f, g.feats[ids.reshape(-1)].reshape(ids.shape + (-1,)))
+
+
+def test_train_minibatch_prefetch_equals_sync(small_graph):
+    g = small_graph
+    cfg = GNNConfig(name="t", model="graphsage", n_nodes=g.n,
+                    feat_dim=g.feats.shape[1], hidden=16,
+                    n_classes=g.n_classes, n_layers=2, fanout=(4, 3),
+                    batch_size=32, loss="ce")
+    r_pf = train_minibatch(g, cfg, lr=0.3, n_iters=6, prefetch=True)
+    r_sync = train_minibatch(g, cfg, lr=0.3, n_iters=6, prefetch=False)
+    np.testing.assert_allclose(r_pf.history.losses, r_sync.history.losses,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernelized forwards == einsum forwards
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gcn", "graphsage"])
+def test_use_agg_kernel_matches_einsum_forwards(small_graph, model):
+    g = small_graph
+    cfg = GNNConfig(name="t", model=model, n_nodes=g.n,
+                    feat_dim=g.feats.shape[1], hidden=32,
+                    n_classes=g.n_classes, n_layers=2, fanout=(5, 3),
+                    batch_size=32, loss="ce")
+    cfg_k = dataclasses.replace(cfg, use_agg_kernel=True)
+    params = G.init_gnn(jax.random.key(0), cfg, g.feats.shape[1])
+    idx, w, ws = to_ell(g)
+    args = [jnp.asarray(x) for x in (g.feats, idx, w, ws)]
+    full = G.full_graph_forward(params, cfg, *args)
+    full_k = G.full_graph_forward(params, cfg_k, *args)
+    np.testing.assert_allclose(np.asarray(full_k), np.asarray(full),
+                               atol=1e-4, rtol=1e-4)
+
+    fb = expand_batch(np.random.default_rng(0), g, g.train_nodes[:32],
+                      (5, 3))
+    feats = [jnp.asarray(f) for f in gather_features(g, fb)]
+    masks = [jnp.asarray(m.astype(np.float32)) for m in fb.masks]
+    wts = [jnp.asarray(x) for x in fb.weights]
+    sw = [jnp.asarray(x) for x in fb.self_w]
+    mini = G.minibatch_forward(params, cfg, feats, masks, wts, sw)
+    mini_k = G.minibatch_forward(params, cfg_k, feats, masks, wts, sw)
+    np.testing.assert_allclose(np.asarray(mini_k), np.asarray(mini),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_use_agg_kernel_gradients_match(small_graph):
+    g = small_graph
+    cfg = GNNConfig(name="t", model="gcn", n_nodes=g.n,
+                    feat_dim=g.feats.shape[1], hidden=16,
+                    n_classes=g.n_classes, n_layers=1, fanout=(4,),
+                    batch_size=16, loss="ce")
+    cfg_k = dataclasses.replace(cfg, use_agg_kernel=True)
+    params = G.init_gnn(jax.random.key(1), cfg, g.feats.shape[1])
+    idx, w, ws = to_ell(g)
+    args = [jnp.asarray(x) for x in (g.feats, idx, w, ws)]
+
+    def loss(p, c):
+        return jnp.sum(G.full_graph_forward(p, c, *args) ** 2)
+
+    g_ref = jax.grad(lambda p: loss(p, cfg))(params)
+    g_ker = jax.grad(lambda p: loss(p, cfg_k))(params)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_ker)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=2e-3)
