@@ -1,4 +1,4 @@
-.PHONY: check test bench-quick
+.PHONY: check test bench-quick sweep-smoke
 
 check:
 	bash scripts/ci.sh
@@ -9,3 +9,9 @@ test:
 bench-quick:
 	PYTHONPATH=src:. python benchmarks/bench_kernel.py --quick
 	PYTHONPATH=src:. python benchmarks/bench_sampler.py --quick
+
+sweep-smoke:
+	PYTHONPATH=src:. python -c "from repro.core.experiment import main; \
+	main(['--preset', 'arxiv-like', '--n', '300', '--iters', '3', \
+	'--bs', '16', '32', '--fanout', '3', '--layers', '1', \
+	'--out', 'ci_sweep_smoke'])"

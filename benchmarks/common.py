@@ -1,19 +1,22 @@
-"""Shared benchmark utilities: runs, sweeps, CSV output."""
+"""Shared benchmark utilities: runs, sweeps, CSV output.
+
+Everything routes through the unified engine (`repro.core.engine`):
+``run_minibatch`` / ``run_fullgraph`` build a TrainPlan + BatchSource and
+call ``Trainer.run()``; grid-shaped benchmarks can use
+``repro.core.experiment.sweep`` directly (re-exported here).
+"""
 from __future__ import annotations
 
-import csv
 import os
 import time
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
 from repro.configs.base import GNNConfig
-from repro.core.metrics import (History, iteration_to_accuracy,
-                                iteration_to_loss, throughput_nodes_per_sec,
-                                time_to_accuracy)
-from repro.core.trainer import train_full_graph, train_minibatch
-from repro.data import make_preset
+from repro.core.engine import (FullGraphSource, SampledSource, Trainer,
+                               TrainPlan)
+from repro.core.experiment import (metrics_row, run_experiment,  # noqa: F401
+                                   save_rows, sweep)
+from repro.data import make_preset  # noqa: F401 (re-export for benches)
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
@@ -30,51 +33,33 @@ def gnn_cfg(graph, model="graphsage", n_layers=1, loss="ce",
 
 
 def run_minibatch(graph, cfg, b, fanouts, iters, seed=0, eval_every=10):
+    plan = TrainPlan(lr=LR[cfg.loss], n_iters=iters, eval_every=eval_every,
+                     seed=seed)
     t0 = time.perf_counter()
-    res = train_minibatch(graph, cfg, lr=LR[cfg.loss], n_iters=iters,
-                          batch_size=b, fanouts=fanouts, seed=seed,
-                          eval_every=eval_every)
+    res = Trainer(graph, cfg, plan,
+                  source=SampledSource(batch_size=b, fanouts=fanouts)).run()
     return res, time.perf_counter() - t0
 
 
 def run_fullgraph(graph, cfg, iters, seed=0, eval_every=10):
+    plan = TrainPlan(lr=LR[cfg.loss], n_iters=iters, eval_every=eval_every,
+                     seed=seed)
     t0 = time.perf_counter()
-    res = train_full_graph(graph, cfg, lr=LR[cfg.loss], n_iters=iters,
-                           seed=seed, eval_every=eval_every)
+    res = Trainer(graph, cfg, plan, source=FullGraphSource()).run()
     return res, time.perf_counter() - t0
 
 
 def summarize(res: "TrainResult", target_loss: Optional[float] = None,
               target_acc: Optional[float] = None) -> Dict:
-    h = res.history
-    out = {
-        "first_loss": round(h.losses[0], 4),
-        "final_loss": round(h.losses[-1], 4),
-        "test_acc": round(res.final_test_acc, 4),
-        "iters": len(h.losses),
-    }
-    if target_loss is not None:
-        out["iter_to_loss"] = iteration_to_loss(h, target_loss)
-    if target_acc is not None:
-        out["iter_to_acc"] = iteration_to_accuracy(h, target_acc)
-        out["time_to_acc"] = time_to_accuracy(h, target_acc)
-    out["throughput_nodes_s"] = round(throughput_nodes_per_sec(h), 1)
-    return out
+    """One metric row — the experiment module's shared schema."""
+    return metrics_row(res, target_loss, target_acc)
 
 
 def write_csv(name: str, rows: List[Dict]) -> str:
-    os.makedirs(OUT_DIR, exist_ok=True)
+    """CSV (+ JSON sibling) via the experiment module's writer."""
     path = os.path.join(OUT_DIR, f"{name}.csv")
     if rows:
-        keys: List[str] = []
-        for r in rows:
-            for k in r:
-                if k not in keys:
-                    keys.append(k)
-        with open(path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=keys, restval="")
-            w.writeheader()
-            w.writerows(rows)
+        path = save_rows(name, rows, out_dir=OUT_DIR)["csv"]
     return path
 
 

@@ -1,10 +1,12 @@
 """Quickstart: train a GraphSAGE model with the paper's two paradigms on a
-synthetic ogbn-arxiv-like graph and compare them.
+synthetic ogbn-arxiv-like graph and compare them — both run through the
+SAME engine (`repro.core.engine.Trainer`); only the BatchSource differs.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs.base import GNNConfig
-from repro.core.trainer import train_full_graph, train_minibatch
+from repro.core.engine import (FullGraphSource, SampledSource, Trainer,
+                               TrainPlan)
 from repro.core.metrics import iteration_to_loss
 from repro.data import make_preset
 
@@ -18,9 +20,12 @@ def main():
                     n_nodes=graph.n, feat_dim=graph.feats.shape[1],
                     hidden=64, n_classes=graph.n_classes, n_layers=2,
                     fanout=(10, 5), batch_size=256, loss="ce")
+    plan = TrainPlan(lr=0.3, n_iters=100)
 
-    full = train_full_graph(graph, cfg, lr=0.3, n_iters=100)
-    mini = train_minibatch(graph, cfg, lr=0.3, n_iters=100)
+    # full-graph GD is the (b=n_train, beta=d_max) limit of mini-batch:
+    # same Trainer, different BatchSource.
+    full = Trainer(graph, cfg, plan, source=FullGraphSource()).run()
+    mini = Trainer(graph, cfg, plan, source=SampledSource()).run()
 
     for name, res in [("full-graph", full), ("mini-batch", mini)]:
         itl = iteration_to_loss(res.history, 0.5)
@@ -28,7 +33,8 @@ def main():
               f"{res.history.losses[-1]:.3f}  "
               f"iter-to-loss(0.5)={itl}  test acc {res.final_test_acc:.3f}")
     print("\nPaper's takeaway: tune (b, beta) before assuming full-graph "
-          "wins — see benchmarks/ for the full sweeps.")
+          "wins — see repro.core.experiment.sweep and benchmarks/ for "
+          "the full grids.")
 
 
 if __name__ == "__main__":

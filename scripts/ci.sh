@@ -16,3 +16,6 @@ python benchmarks/bench_kernel.py --quick
 
 echo "== sampler micro-bench (quick) =="
 python benchmarks/bench_sampler.py --quick
+
+echo "== experiment sweep smoke (2 grid points, few iters) =="
+make sweep-smoke

@@ -153,8 +153,31 @@ class GNNConfig:
         return False
 
     def validate(self) -> None:
-        assert self.model in ("gcn", "graphsage", "gat")
-        assert len(self.fanout) == self.n_layers
+        """Reject bad (b, β) grids and kernel tilings up front — a zero
+        tile or fan-out otherwise surfaces as an opaque Pallas shape
+        error deep inside the aggregation kernel."""
+        def req(cond: bool, msg: str) -> None:
+            if not cond:
+                raise ValueError(f"GNNConfig {self.name!r}: {msg}")
+        req(self.model in ("gcn", "graphsage", "gat"),
+            f"unknown model {self.model!r}")
+        req(self.n_layers > 0, f"n_layers must be > 0, got {self.n_layers}")
+        req(self.hidden > 0, f"hidden must be > 0, got {self.hidden}")
+        req(len(self.fanout) == self.n_layers,
+            f"fanout {self.fanout} must have one β per layer "
+            f"(n_layers={self.n_layers})")
+        req(all(int(b) > 0 for b in self.fanout),
+            f"fan-outs must be positive, got {self.fanout}")
+        req(self.batch_size > 0,
+            f"batch_size must be > 0, got {self.batch_size}")
+        req(self.max_degree > 0,
+            f"max_degree must be > 0, got {self.max_degree}")
+        if self.model == "gat":
+            req(self.gat_heads > 0,
+                f"gat_heads must be > 0, got {self.gat_heads}")
+        for f in ("agg_b_tile", "agg_d_tile", "agg_k_slab"):
+            req(getattr(self, f) > 0,
+                f"{f} must be > 0, got {getattr(self, f)}")
 
 
 # ---------------------------------------------------------------------------

@@ -4,4 +4,8 @@ from repro.core.graph import Graph, to_ell, full_adjacency_dense  # noqa: F401
 from repro.core.sampler import sample_batch, expand_batch, FanoutBatch  # noqa: F401
 from repro.core.gnn import init_gnn, full_graph_forward, minibatch_forward, gnn_loss, accuracy  # noqa: F401
 from repro.core.trainer import train_full_graph, train_minibatch, TrainResult  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    Trainer, TrainPlan, BatchSource, FullGraphSource, SampledSource,
+    Callback, HistoryCallback, EarlyStop, CheckpointCallback)
+from repro.core.experiment import run_experiment, sweep, save_rows  # noqa: F401
 from repro.core import theory, metrics, wasserstein  # noqa: F401

@@ -1,0 +1,546 @@
+"""Unified training engine: one Trainer, pluggable batch sources and
+callbacks (the paper's central framing made executable: full-graph
+training IS mini-batch training at the (b=n, beta=d_max) limit, so both
+paradigms run through the SAME loop and differ only in their BatchSource).
+
+Pieces
+------
+- ``BatchSource``     — where batches come from and how the loss is
+  computed on one.  ``FullGraphSource`` (ELL layout, all train nodes)
+  and ``SampledSource`` (vectorized CSR sampler, optional Prefetcher
+  with reusable host staging buffers) are the paper's two paradigms.
+- ``TrainPlan``       — declarative run spec: optimizer name/lr/schedule
+  (resolved from ``repro.optim``), iteration budget, eval cadence,
+  full-loss tracking, stop targets, checkpoint cadence.
+- ``Callback``        — composable hooks (``on_step`` / ``on_eval`` /
+  ``on_stop`` / ``on_train_start`` / ``on_train_end``).  History
+  recording, early stopping and checkpointing are themselves callbacks.
+- ``Trainer``         — the single loop.  ``train_full_graph`` /
+  ``train_minibatch`` in ``core.trainer`` are thin wrappers over it and
+  reproduce the pre-engine loss sequences bit-for-bit at fixed seed
+  (test-enforced against recorded goldens).
+
+``core.experiment`` builds the (b, beta) grid runner on top of this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable as TCallable, List, Optional, Sequence, \
+    Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core import gnn as G
+from repro.core.graph import Graph, to_ell
+from repro.core.metrics import History
+from repro.core.prefetch import HostStagingRing, Prefetcher
+from repro.core.sampler import gather_features, sample_batch
+
+
+# ---------------------------------------------------------------------------
+# Shared device-side helpers (memoized per graph)
+# ---------------------------------------------------------------------------
+
+def _device_ell(graph: Graph, max_deg: Optional[int] = None):
+    """Device-resident ELL layout, memoized per graph: evaluation and the
+    full-loss tracker used to rebuild (re-pad + re-upload) it on every
+    call.  The cache lives on the Graph instance so it dies with it."""
+    key = int(max_deg or graph.d_max)
+    cache = getattr(graph, "_ell_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(graph, "_ell_cache", cache)
+    if "base" not in cache:                  # max_deg-independent uploads
+        cache["base"] = (jnp.asarray(graph.feats),
+                         jnp.asarray(graph.labels))
+    if key not in cache:
+        idx, w, w_self = to_ell(graph, max_deg=max_deg)
+        cache[key] = (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(w_self))
+    return cache[key] + cache["base"]
+
+
+def _device_nodes(graph: Graph, which: str):
+    """Device copy of a node-id split (train/val/test), uploaded once per
+    graph instead of per evaluation call."""
+    cache = getattr(graph, "_node_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(graph, "_node_cache", cache)
+    if which not in cache:
+        cache[which] = jnp.asarray(getattr(graph, f"{which}_nodes"))
+    return cache[which]
+
+
+def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes
+                  ) -> float:
+    """Inference uses ALL neighbors across the entire graph (§4.1)."""
+    idx, w, w_self, feats, labels = ell
+    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+    sel = jnp.asarray(nodes)
+    return float(G.accuracy(logits[sel], labels[sel]))
+
+
+# ---------------------------------------------------------------------------
+# TrainPlan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """Declarative spec for one training run (what used to be ~10 loose
+    keyword arguments spread over two loops)."""
+    lr: float = 0.3
+    n_iters: int = 100
+    optimizer: str = "sgd"              # name in repro.optim: sgd | adamw
+    momentum: float = 0.0               # sgd only
+    weight_decay: float = 0.0           # adamw only
+    schedule: Optional[str] = None      # None/"constant" | "cosine"
+    warmup: int = 0                     # cosine warmup iters
+    lr_floor: float = 0.0               # cosine floor
+    eval_every: int = 10
+    track_full_loss_every: int = 0      # mini-batch: full objective cadence
+    target_loss: Optional[float] = None  # stop when batch loss <= target
+    target_acc: Optional[float] = None   # stop when val acc >= target
+    ckpt_every: int = 0
+    ckpt_dir: str = "experiments/ckpt"
+    seed: int = 0
+
+    def make_schedule(self):
+        if self.schedule in (None, "constant"):
+            return self.lr
+        if self.schedule == "cosine":
+            from repro.optim import cosine_schedule
+            return cosine_schedule(self.lr, self.warmup, self.n_iters,
+                                   floor=self.lr_floor)
+        raise ValueError(f"unknown schedule {self.schedule!r}")
+
+    def make_optimizer(self):
+        from repro.optim import adamw, sgd
+        lr = self.make_schedule()
+        if self.optimizer == "sgd":
+            return sgd(lr, momentum=self.momentum)
+        if self.optimizer == "adamw":
+            return adamw(lr, weight_decay=self.weight_decay)
+        raise ValueError(f"unknown optimizer {self.optimizer!r}; "
+                         "repro.optim has: sgd, adamw")
+
+
+# ---------------------------------------------------------------------------
+# Batch sources
+# ---------------------------------------------------------------------------
+
+class BatchSource:
+    """Where batches come from + how the training loss is computed on one.
+
+    ``bind`` attaches graph/cfg/plan and uploads whatever is constant
+    across iterations; ``batches`` yields ``(device_batch, n_nodes)``
+    pairs; ``loss`` is traced inside the Trainer's single jitted step.
+    ``done(batch)`` is called once the step consuming the batch has
+    completed (host sync point) so sources may recycle staging buffers.
+    """
+
+    #: the per-iteration training loss already IS the full objective
+    #: (true for full-graph GD; the History callback uses this).
+    loss_is_full_loss = False
+    name = "source"
+
+    def bind(self, graph: Graph, cfg: GNNConfig, plan: TrainPlan
+             ) -> "BatchSource":
+        raise NotImplementedError
+
+    def loss(self, params, batch):
+        raise NotImplementedError
+
+    def batches(self):
+        raise NotImplementedError
+
+    def done(self, batch) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class FullGraphSource(BatchSource):
+    """The (b=n_train, beta=d_max) limit: every iteration is GD over ALL
+    training nodes on the device-resident ELL layout; the "batch" is
+    empty because everything is constant across iterations."""
+
+    loss_is_full_loss = True
+    name = "fullgraph"
+
+    def __init__(self, max_deg: Optional[int] = None):
+        self.max_deg = max_deg
+
+    def bind(self, graph, cfg, plan):
+        self.graph, self.cfg = graph, cfg
+        self.ell = _device_ell(graph, self.max_deg)
+        self.train_nodes = _device_nodes(graph, "train")
+        self.n_nodes = len(graph.train_nodes)
+        return self
+
+    def loss(self, params, batch):
+        idx, w, w_self, feats, labels = self.ell
+        logits = G.full_graph_forward(params, self.cfg, feats, idx, w,
+                                      w_self)
+        lt = logits[self.train_nodes]
+        return G.gnn_loss(lt, labels[self.train_nodes], self.cfg.loss,
+                          self.cfg.n_classes)
+
+    def batches(self):
+        while True:
+            yield None, self.n_nodes
+
+
+class SampledSource(BatchSource):
+    """The paper's mini-batch paradigm: per-iteration (b, beta) fan-out
+    trees from the vectorized CSR sampler, optionally produced ahead of
+    the device step by a background ``Prefetcher`` thread.
+
+    Device uploads go through a ``HostStagingRing``: host staging buffers
+    are allocated ONCE per shape and recycled across batches (the ring
+    slot is released in ``done`` once the consuming step has synced).
+    Hop features are gathered DIRECTLY into the slot's buffers
+    (``np.take(..., out=)``) and masks cast bool->f32 in place, so the
+    plain path's fresh per-batch allocations disappear; with ``prefetch``
+    that staging work runs on the Prefetcher's worker thread, off the
+    device step's critical path.  The whole batch then ships as a single
+    ``jax.device_put`` pytree transfer instead of ~4·n_layers separate
+    ``jnp.asarray`` uploads."""
+
+    name = "minibatch"
+
+    def __init__(self, batch_size: Optional[int] = None,
+                 fanouts: Optional[Sequence[int]] = None,
+                 prefetch: bool = True, depth: int = 2,
+                 reuse_buffers: bool = True):
+        self.batch_size = batch_size
+        self.fanouts = tuple(fanouts) if fanouts is not None else None
+        self.prefetch = prefetch
+        self.depth = depth
+        self.reuse_buffers = reuse_buffers
+        self._pf: Optional[Prefetcher] = None
+        self._ring: Optional[HostStagingRing] = None
+        self._inflight: List[int] = []   # staging slots awaiting done()
+
+    def bind(self, graph, cfg, plan):
+        self.graph, self.cfg = graph, cfg
+        self.b = self.batch_size or cfg.batch_size
+        self.fanouts = self.fanouts or tuple(cfg.fanout)
+        assert len(self.fanouts) == cfg.n_layers
+        self.n_iters = plan.n_iters
+        self.seed = plan.seed
+        self._inflight = []
+        if self.reuse_buffers:
+            # slots outnumber in-flight batches: queue depth + the batch
+            # on the device + the one being staged on the worker
+            self._ring = HostStagingRing(self.depth + 2)
+        return self
+
+    def loss(self, params, batch):
+        feats, masks, weights, self_w, labels = batch
+        logits = G.minibatch_forward(params, self.cfg, feats, masks,
+                                     weights, self_w)
+        return G.gnn_loss(logits, labels, self.cfg.loss,
+                          self.cfg.n_classes)
+
+    # -- host-side batch assembly --------------------------------------
+    def _host_batch(self, graph, fb):
+        """Host tuple for one batch.  Returns ``(slot, host_tree)`` —
+        slot is -1 on the plain (no-ring) path.  Runs on the Prefetcher
+        worker thread when prefetching."""
+        if self._ring is None:
+            feats = gather_features(graph, fb)
+            masks = [m.astype(np.float32) for m in fb.masks]
+            return -1, (feats, masks, fb.weights, fb.self_w, fb.labels)
+        fd = graph.feats.shape[1]
+        specs = ([(ids.shape + (fd,), graph.feats.dtype)
+                  for ids in fb.nodes]
+                 + [(m.shape, np.float32) for m in fb.masks]
+                 + [(w.shape, w.dtype) for w in fb.weights]
+                 + [(s.shape, s.dtype) for s in fb.self_w]
+                 + [(fb.labels.shape, fb.labels.dtype)])
+        slot = self._ring.acquire()
+        bufs = iter(self._ring.buffers(slot, specs))
+        feats = []
+        for ids in fb.nodes:          # gather straight into the buffer
+            buf = next(bufs)
+            np.take(graph.feats, ids.reshape(-1), axis=0,
+                    out=buf.reshape(-1, fd))
+            feats.append(buf)
+        masks = []
+        for m in fb.masks:            # in-place bool -> f32 cast
+            buf = next(bufs)
+            np.copyto(buf, m, casting="unsafe")
+            masks.append(buf)
+        small = []
+        for arrs in (fb.weights, fb.self_w):
+            out = []
+            for a in arrs:
+                buf = next(bufs)
+                np.copyto(buf, a)
+                out.append(buf)
+            small.append(out)
+        labels = next(bufs)
+        np.copyto(labels, fb.labels)
+        return slot, (feats, masks, small[0], small[1], labels)
+
+    def _to_device(self, payload):
+        """One device_put for the whole batch; the ring slot joins an
+        in-flight FIFO (batches complete in order) and is recycled by
+        ``done`` once the consuming step has synced."""
+        slot, host = payload
+        if slot >= 0:
+            self._inflight.append(slot)
+        return jax.device_put(host)
+
+    def batches(self):
+        if self.prefetch:
+            self._pf = Prefetcher(self.graph, self.b, self.fanouts,
+                                  seed=self.seed, depth=self.depth,
+                                  n_batches=self.n_iters,
+                                  payload_fn=self._host_batch)
+            try:
+                for _ in range(self.n_iters):
+                    fb, payload = self._pf.next()
+                    yield self._to_device(payload), fb.batch_size
+            finally:
+                self.close()
+        else:
+            rng = np.random.default_rng(self.seed)
+            for _ in range(self.n_iters):
+                fb = sample_batch(rng, self.graph, self.b, self.fanouts)
+                yield self._to_device(self._host_batch(self.graph, fb)), \
+                    fb.batch_size
+
+    def done(self, batch) -> None:
+        if self._ring is not None and self._inflight:
+            self._ring.release(self._inflight.pop(0))
+
+    def close(self) -> None:
+        if self._ring is not None:
+            self._ring.close()     # wakes a worker blocked in acquire()
+        if self._pf is not None:
+            self._pf.close()
+            self._pf = None
+
+
+# ---------------------------------------------------------------------------
+# Callbacks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainState:
+    """Mutable loop state handed to every callback hook."""
+    graph: Graph
+    cfg: GNNConfig
+    plan: TrainPlan
+    source: BatchSource
+    history: History
+    it: int = -1                      # current iteration (0-based)
+    params: Any = None
+    opt_state: Any = None
+    loss: float = float("nan")        # this iteration's training loss
+    val_acc: Optional[float] = None   # this iteration's eval (None = none)
+    n_nodes: int = 0                  # target nodes in this batch
+    full_loss_fn: Optional[TCallable] = None   # params -> full objective
+    stop: bool = False
+    stop_reason: Optional[str] = None
+
+    def request_stop(self, reason: str) -> None:
+        if not self.stop:
+            self.stop, self.stop_reason = True, reason
+
+
+class Callback:
+    """Hooks fire in list order; ``on_eval`` only on eval iterations,
+    ``on_stop`` once when any callback requested a stop."""
+
+    def on_train_start(self, state: TrainState) -> None: ...
+
+    def on_step(self, state: TrainState) -> None: ...
+
+    def on_eval(self, state: TrainState) -> None: ...
+
+    def on_stop(self, state: TrainState) -> None: ...
+
+    def on_train_end(self, state: TrainState) -> None: ...
+
+
+class HistoryCallback(Callback):
+    """Absorbs the loops' metric recording: per-iteration History rows
+    plus full-objective tracking (every iteration for full-graph GD,
+    every ``track_full_loss_every`` iterations for mini-batch)."""
+
+    def on_train_start(self, state):
+        state.history.start()
+
+    def on_step(self, state):
+        state.history.record(state.loss, state.val_acc,
+                             nodes=state.n_nodes)
+        if state.source.loss_is_full_loss:
+            # full-graph training: the per-iteration loss IS the full loss
+            state.history.full_losses.append(state.loss)
+            state.history.full_loss_iters.append(state.it + 1)
+        elif (state.plan.track_full_loss_every
+              and state.it % state.plan.track_full_loss_every == 0):
+            state.history.full_losses.append(
+                float(state.full_loss_fn(state.params)))
+            state.history.full_loss_iters.append(state.it + 1)
+
+
+class EarlyStop(Callback):
+    """The loops' stop rules: batch loss <= target_loss (checked every
+    step, AFTER recording — the crossing iteration stays in History) and
+    val acc >= target_acc (checked on eval iterations)."""
+
+    def on_step(self, state):
+        tl = state.plan.target_loss
+        if tl is not None and state.loss <= tl:
+            state.request_stop(f"target_loss<={tl}")
+
+    def on_eval(self, state):
+        ta = state.plan.target_acc
+        if ta is not None and state.val_acc is not None \
+                and state.val_acc >= ta:
+            state.request_stop(f"target_acc>={ta}")
+
+
+class CheckpointCallback(Callback):
+    """Periodic params checkpointing via ``repro.checkpoint`` (same
+    cadence semantics as launch/train.py's LM loop: skips step 0)."""
+
+    def on_step(self, state):
+        every = state.plan.ckpt_every
+        if every and state.it and state.it % every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(state.plan.ckpt_dir, state.it, state.params,
+                            {"loss": state.loss, "it": state.it,
+                             "source": state.source.name})
+
+    def on_train_end(self, state):
+        if state.plan.ckpt_every:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(state.plan.ckpt_dir, state.it, state.params,
+                            {"loss": state.loss, "it": state.it,
+                             "source": state.source.name, "final": True})
+
+
+def default_callbacks(plan: TrainPlan) -> List[Callback]:
+    cbs: List[Callback] = [HistoryCallback(), EarlyStop()]
+    if plan.ckpt_every:
+        cbs.append(CheckpointCallback())
+    return cbs
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainResult:
+    params: list
+    history: History
+    final_test_acc: float
+    stop_reason: Optional[str] = None
+
+
+class Trainer:
+    """The single training engine both paradigms run through.
+
+    Per iteration: jitted step (value_and_grad over ``source.loss`` +
+    optimizer update) -> periodic full-neighborhood eval -> ``on_step``
+    callbacks (History / early-stop / checkpoint) -> ``on_eval`` on eval
+    iterations -> break when any callback requested a stop.
+    """
+
+    def __init__(self, graph: Graph, cfg: GNNConfig, plan: TrainPlan,
+                 source: Optional[BatchSource] = None,
+                 callbacks: Optional[Sequence[Callback]] = None,
+                 extra_callbacks: Sequence[Callback] = ()):
+        self.graph, self.cfg, self.plan = graph, cfg, plan
+        self.source = (source or SampledSource()).bind(graph, cfg, plan)
+        self.callbacks = (list(callbacks) if callbacks is not None
+                          else default_callbacks(plan))
+        self.callbacks += list(extra_callbacks)
+        self.opt = plan.make_optimizer()
+        # evaluation + full-loss tracking reuse the source's ELL when it
+        # has one (FullGraphSource with max_deg: eval on the SAME capped
+        # adjacency the old loop used, and no second full-width upload)
+        self._ell = getattr(self.source, "ell", None) or _device_ell(graph)
+
+        src = self.source
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: src.loss(p, batch))(params)
+            params, opt_state = self.opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        self._step = step
+
+        idx_e, w_e, ws_e, feats_e, labels_e = self._ell
+        train_sel = _device_nodes(graph, "train")
+
+        @jax.jit
+        def full_loss(params):
+            logits = G.full_graph_forward(params, cfg, feats_e, idx_e,
+                                          w_e, ws_e)
+            return G.gnn_loss(logits[train_sel], labels_e[train_sel],
+                              cfg.loss, cfg.n_classes)
+
+        self._full_loss = full_loss
+
+    # ------------------------------------------------------------------
+    def evaluate(self, params, nodes) -> float:
+        return evaluate_full(params, self.cfg, self.graph, self._ell,
+                             nodes)
+
+    def full_train_loss(self, params) -> float:
+        return float(self._full_loss(params))
+
+    def _fire(self, hook: str, state: TrainState) -> None:
+        for cb in self.callbacks:
+            getattr(cb, hook)(state)
+
+    # ------------------------------------------------------------------
+    def run(self) -> TrainResult:
+        graph, cfg, plan = self.graph, self.cfg, self.plan
+        key = jax.random.key(plan.seed)
+        params = G.init_gnn(key, cfg, graph.feats.shape[1])
+        opt_state = self.opt.init(params)
+
+        state = TrainState(graph=graph, cfg=cfg, plan=plan,
+                           source=self.source, history=History(),
+                           params=params, opt_state=opt_state,
+                           full_loss_fn=self._full_loss)
+        self._fire("on_train_start", state)
+        try:
+            val_sel = _device_nodes(graph, "val")
+            stream = self.source.batches()
+            for it in range(plan.n_iters):
+                batch, n_nodes = next(stream)
+                params, opt_state, loss = self._step(params, opt_state,
+                                                     batch)
+                val = (self.evaluate(params, val_sel)
+                       if it % plan.eval_every == 0 else None)
+                state.it, state.params, state.opt_state = it, params, \
+                    opt_state
+                state.loss = float(loss)       # host sync: step finished
+                state.val_acc, state.n_nodes = val, n_nodes
+                self.source.done(batch)        # staging slot recyclable
+                self._fire("on_step", state)
+                if val is not None:
+                    self._fire("on_eval", state)
+                if state.stop:
+                    self._fire("on_stop", state)
+                    break
+        finally:
+            self.source.close()
+        acc = self.evaluate(params, _device_nodes(graph, "test"))
+        state.params = params
+        self._fire("on_train_end", state)
+        return TrainResult(params, state.history, acc, state.stop_reason)

@@ -1,0 +1,233 @@
+"""First-class (b, β) experiment runner on top of the unified Trainer.
+
+Every figure in the paper's §5 is a grid over batch size b and fan-out
+size β (with full-graph GD as the (b=n, β=d_max) corner).  This module
+drives those grids through the engine and emits structured rows:
+
+    plan  = TrainPlan(lr=0.3, n_iters=200, eval_every=10)
+    row   = run_experiment(graph, cfg, plan, b=256, fanouts=(10, 5))
+    rows  = sweep(graph, cfg, plan, batch_sizes=[64, 256],
+                  fanout_grid=[(5, 3), (10, 5)], include_fullgraph=True)
+    save_rows("fig2_sweep", rows)          # JSON + CSV side by side
+
+CLI (used by scripts/ci.sh as the per-PR sweep smoke):
+
+    PYTHONPATH=src python -m repro.core.experiment \
+        --preset arxiv-like --n 400 --iters 4 --bs 32 64 --fanout 3
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import dataclasses
+import itertools
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import GNNConfig
+from repro.core.engine import (BatchSource, Callback, FullGraphSource,
+                               SampledSource, Trainer, TrainPlan,
+                               TrainResult)
+from repro.core.graph import Graph
+from repro.core.metrics import (iteration_to_accuracy, iteration_to_loss,
+                                iteration_to_full_loss,
+                                throughput_nodes_per_sec, time_to_accuracy)
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+# ---------------------------------------------------------------------------
+# Single experiment
+# ---------------------------------------------------------------------------
+
+def metrics_row(res: TrainResult, target_loss: Optional[float] = None,
+                target_acc: Optional[float] = None) -> Dict:
+    """Metric columns for one TrainResult — the single row schema shared
+    by run_experiment, sweep, and benchmarks/common.summarize."""
+    h = res.history
+    row: Dict = {
+        "iters": len(h.losses),
+        "first_loss": round(h.losses[0], 6),
+        "final_loss": round(h.losses[-1], 6),
+        "test_acc": round(res.final_test_acc, 6),
+        "throughput_nodes_s": round(throughput_nodes_per_sec(h), 1),
+        "wall_time_s": round(h.times[-1], 4) if h.times else 0.0,
+        "stop_reason": res.stop_reason or "",
+    }
+    if target_loss is not None:
+        row["iter_to_loss"] = iteration_to_loss(h, target_loss)
+        if h.full_losses:
+            row["iter_to_full_loss"] = iteration_to_full_loss(
+                h, target_loss)
+    if target_acc is not None:
+        row["iter_to_acc"] = iteration_to_accuracy(h, target_acc)
+        row["time_to_acc_s"] = time_to_accuracy(h, target_acc)
+    return row
+
+
+def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
+                   paradigm: str = "minibatch",
+                   b: Optional[int] = None,
+                   fanouts: Optional[Sequence[int]] = None,
+                   source: Optional[BatchSource] = None,
+                   callbacks: Sequence[Callback] = (),
+                   report_loss: Optional[float] = None,
+                   report_acc: Optional[float] = None,
+                   keep_result: bool = False) -> Dict:
+    """One grid point -> one structured row (spec + metrics).
+
+    ``paradigm`` is "minibatch" or "fullgraph"; a custom ``source``
+    overrides it.  ``report_loss`` / ``report_acc`` add iteration-to-*
+    metrics WITHOUT stopping the run (the plan's ``target_loss`` /
+    ``target_acc`` both stop and report).  With ``keep_result`` the full
+    TrainResult (params + History) rides along under "_result" for
+    callers that plot curves.
+    """
+    # validate the EFFECTIVE (b, fanouts) the run will use, not just the
+    # base cfg — bad overrides must fail fast, not deep in the sampler
+    if b is not None or fanouts is not None:
+        cfg = dataclasses.replace(
+            cfg,
+            batch_size=cfg.batch_size if b is None else b,
+            fanout=cfg.fanout if fanouts is None else tuple(fanouts))
+    cfg.validate()
+    if source is None:
+        if paradigm == "fullgraph":
+            source = FullGraphSource()
+        elif paradigm == "minibatch":
+            source = SampledSource(batch_size=b, fanouts=fanouts)
+        else:
+            raise ValueError(
+                f"paradigm must be 'fullgraph' or 'minibatch', "
+                f"got {paradigm!r}")
+    res = Trainer(graph, cfg, plan, source=source,
+                  extra_callbacks=callbacks).run()
+    # label the row from the source that actually ran (bind() resolved
+    # its b/fanouts), not from the `paradigm` string it may override
+    name = getattr(source, "name", "custom")
+    if name == "fullgraph":
+        spec = {"paradigm": name, "b": len(graph.train_nodes),
+                "fanouts": f"d_max={graph.d_max}"}
+    else:
+        spec = {"paradigm": name,
+                "b": getattr(source, "b", b or cfg.batch_size),
+                "fanouts": "x".join(map(str, getattr(source, "fanouts",
+                                                     None) or fanouts
+                                        or cfg.fanout))}
+    row = {**spec, "seed": plan.seed, **metrics_row(
+        res,
+        plan.target_loss if report_loss is None else report_loss,
+        plan.target_acc if report_acc is None else report_acc)}
+    if keep_result:
+        row["_result"] = res
+    return row
+
+
+# ---------------------------------------------------------------------------
+# (b, β) sweep
+# ---------------------------------------------------------------------------
+
+def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
+          batch_sizes: Sequence[int] = (),
+          fanout_grid: Sequence[Sequence[int]] = (),
+          include_fullgraph: bool = False,
+          seeds: Sequence[int] = (0,),
+          verbose: bool = False) -> List[Dict]:
+    """Run the (b, β) product grid (the shape behind every §5 figure).
+
+    ``fanout_grid`` entries are per-hop fan-out tuples (int entries are
+    broadcast to all ``cfg.n_layers`` hops).  Each grid point gets a cfg
+    copy with that (b, β) so ``GNNConfig.validate()`` rejects bad grids
+    before any sampling or kernel work starts.
+    """
+    points: List[Tuple[str, Optional[int], Optional[Tuple[int, ...]]]] = []
+    if include_fullgraph:
+        points.append(("fullgraph", None, None))
+    for b, beta in itertools.product(batch_sizes, fanout_grid):
+        fo = (tuple(beta) if isinstance(beta, (tuple, list))
+              else (int(beta),) * cfg.n_layers)
+        points.append(("minibatch", int(b), fo))
+    rows: List[Dict] = []
+    for paradigm, b, fo in points:
+        for seed in seeds:
+            plan_pt = dataclasses.replace(plan, seed=seed)
+            if plan.ckpt_every:
+                # namespace checkpoints per grid point/seed so runs don't
+                # overwrite each other's ckpt_{step}.npz files
+                tag = (paradigm if paradigm == "fullgraph"
+                       else f"b{b}_f{'x'.join(map(str, fo))}")
+                plan_pt = dataclasses.replace(
+                    plan_pt, ckpt_dir=os.path.join(plan.ckpt_dir,
+                                                   f"{tag}_s{seed}"))
+            # run_experiment owns the effective-(b, fanouts) validation
+            # and fails fast on bad grid points (satellite)
+            row = run_experiment(graph, cfg, plan_pt, paradigm=paradigm,
+                                 b=b, fanouts=fo)
+            rows.append(row)
+            if verbose:
+                print(",".join(f"{k}={v}" for k, v in row.items()),
+                      flush=True)
+    return rows
+
+
+def save_rows(name: str, rows: List[Dict], out_dir: str = OUT_DIR
+              ) -> Dict[str, str]:
+    """Structured outputs: <name>.json (row list) + <name>.csv."""
+    os.makedirs(out_dir, exist_ok=True)
+    rows = [{k: v for k, v in r.items() if not k.startswith("_")}
+            for r in rows]
+    jpath = os.path.join(out_dir, f"{name}.json")
+    with open(jpath, "w") as f:
+        json.dump(rows, f, indent=1)
+    cpath = os.path.join(out_dir, f"{name}.csv")
+    keys: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(cpath, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    return {"json": jpath, "csv": cpath}
+
+
+# ---------------------------------------------------------------------------
+# CLI — tiny sweep smoke for CI
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
+    from repro.data import make_preset
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="arxiv-like")
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--iters", type=int, default=4)
+    ap.add_argument("--bs", type=int, nargs="+", default=[32, 64])
+    ap.add_argument("--fanout", type=int, nargs="+", default=[3])
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--eval-every", type=int, default=2)
+    ap.add_argument("--fullgraph", action="store_true")
+    ap.add_argument("--out", default="sweep_smoke")
+    args = ap.parse_args(argv)
+
+    graph = make_preset(args.preset, n=args.n, seed=0)
+    cfg = GNNConfig(name="sweep", model="graphsage", n_nodes=graph.n,
+                    feat_dim=graph.feats.shape[1], hidden=32,
+                    n_classes=graph.n_classes, n_layers=args.layers,
+                    fanout=(5,) * args.layers, batch_size=64, loss="ce")
+    plan = TrainPlan(lr=args.lr, n_iters=args.iters,
+                     eval_every=args.eval_every)
+    fo = (tuple(args.fanout) * args.layers if len(args.fanout) == 1
+          else tuple(args.fanout))
+    rows = sweep(graph, cfg, plan, batch_sizes=args.bs, fanout_grid=[fo],
+                 include_fullgraph=args.fullgraph, verbose=True)
+    paths = save_rows(args.out, rows)
+    print(json.dumps({"rows": len(rows), **paths}))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ class History:
     full_losses: List[float] = dataclasses.field(default_factory=list)
     full_loss_iters: List[int] = dataclasses.field(default_factory=list)
     val_accs: List[float] = dataclasses.field(default_factory=list)
+    val_acc_iters: List[int] = dataclasses.field(default_factory=list)
     times: List[float] = dataclasses.field(default_factory=list)
     nodes_processed: List[int] = dataclasses.field(default_factory=list)
     _t0: Optional[float] = None
@@ -27,6 +28,10 @@ class History:
         self.losses.append(float(loss))
         if val_acc is not None:
             self.val_accs.append(float(val_acc))
+            # evals happen only every eval_every iterations: remember the
+            # 1-based iteration of each one (like full_loss_iters) so the
+            # *_to_accuracy helpers report true iteration numbers
+            self.val_acc_iters.append(len(self.losses))
         self.times.append(time.perf_counter() - (self._t0 or 0.0))
         self.nodes_processed.append(nodes)
 
@@ -50,15 +55,28 @@ def iteration_to_full_loss(hist: History, target: float) -> Optional[int]:
 
 
 def iteration_to_accuracy(hist: History, target: float) -> Optional[int]:
-    for i, a in enumerate(hist.val_accs):
+    """# iterations until val accuracy >= target (None = never).
+
+    ``val_accs`` is recorded only every ``eval_every`` iterations, so the
+    list index is NOT the iteration number — use the recorded
+    ``val_acc_iters`` (falling back to index+1 for hand-built Histories
+    without them, where the lists are the same length)."""
+    iters = (hist.val_acc_iters
+             if len(hist.val_acc_iters) == len(hist.val_accs)
+             else range(1, len(hist.val_accs) + 1))
+    for it, a in zip(iters, hist.val_accs):
         if a >= target:
-            return i + 1
+            return it
     return None
 
 
 def time_to_accuracy(hist: History, target: float) -> Optional[float]:
     it = iteration_to_accuracy(hist, target)
-    return None if it is None else hist.times[it - 1]
+    if it is None:
+        return None
+    # wall time at the iteration that crossed the target (times has one
+    # entry per training iteration, 1-based `it`)
+    return hist.times[min(it, len(hist.times)) - 1]
 
 
 def throughput_nodes_per_sec(hist: History) -> float:

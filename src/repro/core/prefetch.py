@@ -22,23 +22,83 @@ from repro.core.graph import Graph
 from repro.core.sampler import FanoutBatch, gather_features, sample_batch
 
 
+class HostStagingRing:
+    """Reusable host-side staging buffers for device uploads.
+
+    Mini-batch shapes are constant across iterations (b and the fan-outs
+    are fixed), so the host arrays feeding ``jax.device_put`` can be
+    allocated ONCE per shape and recycled instead of freshly allocated
+    every batch — the host-memory analogue of pinned-buffer reuse on
+    GPU/TPU loaders (ROADMAP "pin + reuse device buffers" follow-up; true
+    ``donate_argnums`` device-buffer donation is the real-TPU extension).
+
+    ``acquire()`` hands out a free slot; ``buffers(slot, specs)`` returns
+    the slot's once-allocated buffers for producers to FILL in place
+    (``np.take(..., out=)`` gathers, in-place dtype casts — no per-batch
+    allocation and no extra copy); ``release(slot)`` makes the slot
+    reusable once the consuming step has synced.  Slot handout is a
+    blocking queue, so a producer that runs ahead of ``release``
+    backpressures instead of overwriting in-flight data.  Thread-safe:
+    acquire/release may run on different threads; ``close()`` wakes any
+    blocked ``acquire``.
+    """
+
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self._free: "queue.Queue[int]" = queue.Queue()
+        for i in range(n_slots):
+            self._free.put(i)
+        self._bufs = {}          # slot -> flat list of staging ndarrays
+        self._closed = False
+
+    def acquire(self) -> int:
+        while True:
+            try:
+                return self._free.get(timeout=0.1)
+            except queue.Empty:
+                if self._closed:
+                    raise RuntimeError("HostStagingRing closed")
+
+    def buffers(self, slot: int, specs) -> List[np.ndarray]:
+        """The slot's buffers for ``specs`` = [(shape, dtype), ...] —
+        allocated on first use, reused verbatim while specs match."""
+        bufs = self._bufs.get(slot)
+        if bufs is None or len(bufs) != len(specs) or any(
+                b.shape != tuple(s) or b.dtype != np.dtype(d)
+                for b, (s, d) in zip(bufs, specs)):
+            bufs = [np.empty(s, d) for s, d in specs]
+            self._bufs[slot] = bufs
+        return bufs
+
+    def close(self) -> None:
+        self._closed = True
+
+    def release(self, slot: int) -> None:
+        self._free.put(slot)
+
+
 class Prefetcher:
     """Double-buffered background sampler + feature gather.
 
-    Yields (FanoutBatch, gathered hop features) tuples.  `depth` is the
-    queue bound (2 = classic double buffering: one batch in flight on the
-    host while the device consumes the other).
+    Yields (FanoutBatch, payload) tuples, where payload is the gathered
+    hop features by default; `payload_fn(graph, fb)` overrides the
+    per-batch host work so callers can move feature gather + staging
+    onto this background thread (see `engine.SampledSource`).  `depth`
+    is the queue bound (2 = classic double buffering: one batch in
+    flight on the host while the device consumes the other).
     """
 
     _SENTINEL = object()
 
     def __init__(self, graph: Graph, batch_size: int,
                  fanouts: Sequence[int], seed: int = 0, depth: int = 2,
-                 n_batches: Optional[int] = None):
+                 n_batches: Optional[int] = None,
+                 payload_fn=None):
         self.graph = graph
         self.batch_size = batch_size
         self.fanouts = tuple(fanouts)
         self.n_batches = n_batches
+        self.payload_fn = payload_fn or gather_features
         self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
@@ -55,7 +115,7 @@ class Prefetcher:
                     break
                 fb = sample_batch(self._rng, self.graph, self.batch_size,
                                   self.fanouts)
-                feats = gather_features(self.graph, fb)
+                feats = self.payload_fn(self.graph, fb)
                 # blocking put with timeout so close() can interrupt
                 while not self._stop.is_set():
                     try:

@@ -1,63 +1,31 @@
-"""Full-graph GD vs mini-batch SGD training loops (the paper's two
-paradigms) with identical model code and metric recording.
+"""Legacy entry points for the paper's two paradigms, now thin wrappers
+over the unified engine in ``repro.core.engine``.
 
-Full-graph: GD over all training nodes each iteration, ELL layout.
-Mini-batch: per-iteration (b, β)-sampled fan-out trees, SGD.
-Both record History for iteration-to-loss / iteration-to-accuracy /
-time-to-accuracy / throughput (§5.1).
+Full-graph: GD over all training nodes each iteration, ELL layout —
+``Trainer`` + ``FullGraphSource`` (the (b=n, beta=d_max) limit case).
+Mini-batch: per-iteration (b, β)-sampled fan-out trees + SGD —
+``Trainer`` + ``SampledSource``.
+
+Both reproduce the pre-engine loops' loss/History sequences bit-for-bit
+at fixed seed (test-enforced against tests/goldens/trainer_seed.json).
+Prefer the engine API (``Trainer``, ``TrainPlan``, ``BatchSource``,
+callbacks) and ``repro.core.experiment`` for new code — see
+docs/training_api.md.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import GNNConfig
-from repro.core import gnn as G
-from repro.core.graph import Graph, to_ell
-from repro.core.metrics import History
-from repro.core.prefetch import Prefetcher
-from repro.core.sampler import FanoutBatch, expand_batch, gather_features, \
-    sample_batch
-from repro.optim import sgd
+from repro.core.engine import (FullGraphSource, SampledSource, Trainer,
+                               TrainPlan, TrainResult, _device_ell,
+                               evaluate_full)
+from repro.core.graph import Graph
 
-
-@dataclasses.dataclass
-class TrainResult:
-    params: list
-    history: History
-    final_test_acc: float
-
-
-def _device_ell(graph: Graph, max_deg: Optional[int] = None):
-    """Device-resident ELL layout, memoized per graph: evaluation and the
-    full-loss tracker used to rebuild (re-pad + re-upload) it on every
-    call.  The cache lives on the Graph instance so it dies with it."""
-    key = int(max_deg or graph.d_max)
-    cache = getattr(graph, "_ell_cache", None)
-    if cache is None:
-        cache = {}
-        object.__setattr__(graph, "_ell_cache", cache)
-    if "base" not in cache:                  # max_deg-independent uploads
-        cache["base"] = (jnp.asarray(graph.feats),
-                         jnp.asarray(graph.labels))
-    if key not in cache:
-        idx, w, w_self = to_ell(graph, max_deg=max_deg)
-        cache[key] = (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(w_self))
-    return cache[key] + cache["base"]
-
-
-def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes
-                  ) -> float:
-    """Inference uses ALL neighbors across the entire graph (§4.1)."""
-    idx, w, w_self, feats, labels = ell
-    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
-    sel = jnp.asarray(nodes)
-    return float(G.accuracy(logits[sel], labels[sel]))
+__all__ = ["TrainResult", "train_full_graph", "train_minibatch",
+           "evaluate_full", "full_graph_train_loss"]
 
 
 def train_full_graph(graph: Graph, cfg: GNNConfig, lr: float,
@@ -65,52 +33,10 @@ def train_full_graph(graph: Graph, cfg: GNNConfig, lr: float,
                      target_loss: Optional[float] = None,
                      max_deg: Optional[int] = None) -> TrainResult:
     """Paper's full-graph paradigm: GD on all n_train nodes, Ã_train^full."""
-    ell = _device_ell(graph, max_deg)
-    idx, w, w_self, feats, labels = ell
-    train_nodes = jnp.asarray(graph.train_nodes)
-    key = jax.random.key(seed)
-    params = G.init_gnn(key, cfg, graph.feats.shape[1])
-    opt = sgd(lr)
-    opt_state = opt.init(params)
-
-    @jax.jit
-    def step(params, opt_state):
-        def loss_fn(p):
-            logits = G.full_graph_forward(p, cfg, feats, idx, w, w_self)
-            lt = logits[train_nodes]
-            return G.gnn_loss(lt, labels[train_nodes], cfg.loss,
-                              cfg.n_classes)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    hist = History()
-    hist.start()
-    n_train = len(graph.train_nodes)
-    for it in range(n_iters):
-        params, opt_state, loss = step(params, opt_state)
-        val = (evaluate_full(params, cfg, graph, ell, graph.val_nodes)
-               if it % eval_every == 0 else None)
-        hist.record(float(loss), val, nodes=n_train)
-        # full-graph training: the per-iteration loss IS the full loss
-        hist.full_losses.append(float(loss))
-        hist.full_loss_iters.append(it + 1)
-        if target_loss is not None and float(loss) <= target_loss:
-            break
-    acc = evaluate_full(params, cfg, graph, ell, graph.test_nodes)
-    return TrainResult(params, hist, acc)
-
-
-def _batch_to_device(graph: Graph, batch: FanoutBatch, host_feats=None):
-    """host_feats: pre-gathered hop features (from the Prefetcher thread);
-    gathered inline when absent."""
-    if host_feats is None:
-        host_feats = gather_features(graph, batch)
-    feats = [jnp.asarray(f) for f in host_feats]
-    masks = [jnp.asarray(m.astype(np.float32)) for m in batch.masks]
-    weights = [jnp.asarray(wt) for wt in batch.weights]
-    self_w = [jnp.asarray(s) for s in batch.self_w]
-    return feats, masks, weights, self_w, jnp.asarray(batch.labels)
+    plan = TrainPlan(lr=lr, n_iters=n_iters, eval_every=eval_every,
+                     seed=seed, target_loss=target_loss)
+    return Trainer(graph, cfg, plan,
+                   source=FullGraphSource(max_deg=max_deg)).run()
 
 
 def train_minibatch(graph: Graph, cfg: GNNConfig, lr: float, n_iters: int,
@@ -124,64 +50,12 @@ def train_minibatch(graph: Graph, cfg: GNNConfig, lr: float, n_iters: int,
     Host-side sampling emulates the CPU-side loaders of DGL/PyG; with
     `prefetch` it runs on a background thread, double-buffered ahead of
     the device step (same batch sequence as the synchronous path)."""
-    b = batch_size or cfg.batch_size
-    fanouts = tuple(fanouts or cfg.fanout)
-    assert len(fanouts) == cfg.n_layers
-    rng = np.random.default_rng(seed)
-    key = jax.random.key(seed)
-    params = G.init_gnn(key, cfg, graph.feats.shape[1])
-    opt = sgd(lr)
-    opt_state = opt.init(params)
-    ell = _device_ell(graph)   # for evaluation only
-
-    @jax.jit
-    def step(params, opt_state, feats, masks, weights, self_w, labels):
-        def loss_fn(p):
-            logits = G.minibatch_forward(p, cfg, feats, masks, weights,
-                                         self_w)
-            return G.gnn_loss(logits, labels, cfg.loss, cfg.n_classes)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    train_sel = jnp.asarray(graph.train_nodes)
-    idx_e, w_e, ws_e, feats_e, labels_e = ell
-
-    @jax.jit
-    def full_loss(params):
-        logits = G.full_graph_forward(params, cfg, feats_e, idx_e, w_e,
-                                      ws_e)
-        return G.gnn_loss(logits[train_sel], labels_e[train_sel], cfg.loss,
-                          cfg.n_classes)
-
-    pf = (Prefetcher(graph, b, fanouts, seed=seed, n_batches=n_iters)
-          if prefetch else None)
-    hist = History()
-    hist.start()
-    try:
-        for it in range(n_iters):
-            if pf is not None:
-                fb, host_feats = pf.next()
-            else:
-                fb = sample_batch(rng, graph, b, fanouts)
-                host_feats = None
-            feats, masks, weights, self_w, labels = _batch_to_device(
-                graph, fb, host_feats)
-            params, opt_state, loss = step(params, opt_state, feats, masks,
-                                           weights, self_w, labels)
-            val = (evaluate_full(params, cfg, graph, ell, graph.val_nodes)
-                   if it % eval_every == 0 else None)
-            hist.record(float(loss), val, nodes=fb.batch_size)
-            if track_full_loss_every and it % track_full_loss_every == 0:
-                hist.full_losses.append(float(full_loss(params)))
-                hist.full_loss_iters.append(it + 1)
-            if target_loss is not None and float(loss) <= target_loss:
-                break
-    finally:
-        if pf is not None:
-            pf.close()
-    acc = evaluate_full(params, cfg, graph, ell, graph.test_nodes)
-    return TrainResult(params, hist, acc)
+    plan = TrainPlan(lr=lr, n_iters=n_iters, eval_every=eval_every,
+                     seed=seed, target_loss=target_loss,
+                     track_full_loss_every=track_full_loss_every)
+    source = SampledSource(batch_size=batch_size, fanouts=fanouts,
+                           prefetch=prefetch)
+    return Trainer(graph, cfg, plan, source=source).run()
 
 
 def full_graph_train_loss(graph: Graph, params, cfg: GNNConfig,
@@ -191,6 +65,7 @@ def full_graph_train_loss(graph: Graph, params, cfg: GNNConfig,
     `_device_ell` memoizes per graph, so repeated calls (every
     `track_full_loss_every` iterations) no longer rebuild the ELL;
     callers holding a prebuilt ELL can pass it directly."""
+    from repro.core import gnn as G
     if ell is None:
         ell = _device_ell(graph)
     idx, w, w_self, feats, labels = ell

@@ -76,15 +76,34 @@ def train_lm(args) -> dict:
 
 
 def train_gnn(args) -> dict:
-    from repro.core.trainer import train_full_graph, train_minibatch
+    """Both paradigms through the unified engine; a --sweep-bs /
+    --sweep-fanout grid runs through the experiment runner instead."""
+    from repro.core.engine import (FullGraphSource, SampledSource,
+                                   Trainer, TrainPlan)
+    from repro.core.experiment import save_rows, sweep
 
     cfg = get_config(args.arch, smoke=args.smoke)
     graph = make_preset(args.preset, seed=args.seed)
     cfg_run = cfg.__class__(**{**cfg.__dict__,
                                "n_classes": graph.n_classes,
                                "feat_dim": graph.feats.shape[1]})
-    rf = train_full_graph(graph, cfg_run, lr=args.lr, n_iters=args.steps)
-    rm = train_minibatch(graph, cfg_run, lr=args.lr, n_iters=args.steps)
+    plan = TrainPlan(lr=args.lr, n_iters=args.steps, seed=args.seed,
+                     eval_every=args.log_every,
+                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    if args.sweep_bs or args.sweep_fanout:
+        # each --sweep-fanout value is ONE grid point, broadcast to all
+        # hops by sweep() (so `--sweep-fanout 5 10 15` sweeps β)
+        rows = sweep(graph, cfg_run, plan,
+                     batch_sizes=args.sweep_bs or [cfg_run.batch_size],
+                     fanout_grid=[int(f) for f in args.sweep_fanout]
+                     if args.sweep_fanout else [cfg_run.fanout],
+                     include_fullgraph=True, verbose=True)
+        paths = save_rows(f"{args.arch}_sweep", rows)
+        result = {"arch": args.arch, "sweep_rows": len(rows), **paths}
+        print(json.dumps(result, indent=2))
+        return result
+    rf = Trainer(graph, cfg_run, plan, source=FullGraphSource()).run()
+    rm = Trainer(graph, cfg_run, plan, source=SampledSource()).run()
     result = {
         "arch": args.arch, "preset": args.preset,
         "full_graph": {"final_loss": rf.history.losses[-1],
@@ -108,6 +127,11 @@ def main():
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--preset", default="arxiv-like")
+    ap.add_argument("--sweep-bs", type=int, nargs="*", default=None,
+                    help="GNN only: batch sizes for a (b, β) sweep")
+    ap.add_argument("--sweep-fanout", type=int, nargs="*", default=None,
+                    help="GNN only: fan-out grid values; each value is "
+                         "one grid point, broadcast to every hop")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="experiments/ckpt")
