@@ -1,4 +1,4 @@
-.PHONY: check test bench-quick sweep-smoke
+.PHONY: check test bench-quick bench-engine bench-engine-baseline sweep-smoke
 
 check:
 	bash scripts/ci.sh
@@ -9,6 +9,12 @@ test:
 bench-quick:
 	PYTHONPATH=src:. python benchmarks/bench_kernel.py --quick
 	PYTHONPATH=src:. python benchmarks/bench_sampler.py --quick
+
+bench-engine:
+	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --check
+
+bench-engine-baseline:
+	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke
 
 sweep-smoke:
 	PYTHONPATH=src:. python -c "from repro.core.experiment import main; \

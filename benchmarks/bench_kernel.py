@@ -15,6 +15,13 @@ plus 4+4 id/weight bytes per (b, k) pair regardless of tiling):
   tiled kernel loads one contiguous (b_tile, k_slab) block per step,
   amortizing the grain across b_tile*k_slab weights.
 * output: written once (the accumulator lives in VMEM), b*d*itemsize.
+
+exposed-wait accounting (the double-buffering win): a "serialized DMA
+wait" is a kernel step that must stall on HBM with no compute to hide
+behind.  The row kernel waits its single row DMA EVERY grid step.  The
+tiled kernel double-buffers K-slabs across the sequential K grid axis,
+so only the FIRST slab of each (b_tile, d_tile) output tile is exposed;
+the other K/k_slab - 1 slab waits overlap the previous slab's FMAs.
 """
 from __future__ import annotations
 
@@ -47,6 +54,8 @@ def _accounting(kernel, n, d, b, k, itemsize=4,
         w_loads = grid_steps                      # one (1,1) block per step
         w_bytes = w_loads * _DMA_GRAIN
         dmas_per_step = 1
+        # no pipelining: every step stalls on its own row DMA
+        exposed_waits = grid_steps
     else:
         b_pad = -(-b // b_tile) * b_tile
         k_pad = -(-k // k_slab) * k_slab
@@ -57,10 +66,14 @@ def _accounting(kernel, n, d, b, k, itemsize=4,
         w_loads = grid_steps                      # one (b_tile,k_slab) block
         w_bytes = w_loads * max(b_tile * k_slab * 4, _DMA_GRAIN)
         dmas_per_step = b_tile * k_slab
+        # double-buffered slabs: only the warm-up slab of each output
+        # tile is an exposed wait; the rest prefetch behind the FMAs
+        exposed_waits = (b_pad // b_tile) * d_passes
     total = feat_bytes + idx_bytes + w_bytes + out_bytes
     return {
         "grid_steps": grid_steps,
         "dmas_per_step": dmas_per_step,
+        "exposed_waits": exposed_waits,
         "feat_bytes": feat_bytes,
         "w_bytes": w_bytes,
         "bytes_moved": total,

@@ -17,5 +17,13 @@ python benchmarks/bench_kernel.py --quick
 echo "== sampler micro-bench (quick) =="
 python benchmarks/bench_sampler.py --quick
 
+# the gate compares absolute steps/s against the committed
+# BENCH_engine.json (recorded on the authoring machine) — on a much
+# slower or loaded host, widen the tolerance, e.g. BENCH_TOL=0.6, and
+# refresh the baseline from the canonical machine via
+# `make bench-engine-baseline`
+echo "== engine throughput bench (smoke + regression gate) =="
+python benchmarks/bench_engine.py --smoke --check
+
 echo "== experiment sweep smoke (2 grid points, few iters) =="
 make sweep-smoke

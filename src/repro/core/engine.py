@@ -6,12 +6,15 @@ paradigms run through the SAME loop and differ only in their BatchSource).
 Pieces
 ------
 - ``BatchSource``     — where batches come from and how the loss is
-  computed on one.  ``FullGraphSource`` (ELL layout, all train nodes)
-  and ``SampledSource`` (vectorized CSR sampler, optional Prefetcher
-  with reusable host staging buffers) are the paper's two paradigms.
+  computed on one.  ``FullGraphSource`` (ELL layout, all train nodes),
+  ``ShardedFullGraphSource`` (the same, rows laid out over the NODES
+  axis of a local device mesh) and ``SampledSource`` (vectorized CSR
+  sampler, optional Prefetcher with reusable host staging buffers) are
+  the paper's two paradigms.
 - ``TrainPlan``       — declarative run spec: optimizer name/lr/schedule
   (resolved from ``repro.optim``), iteration budget, eval cadence,
-  full-loss tracking, stop targets, checkpoint cadence.
+  full-loss tracking, stop targets, checkpoint cadence, and the
+  throughput knobs (``donate``, ``deferred_sync``).
 - ``Callback``        — composable hooks (``on_step`` / ``on_eval`` /
   ``on_stop`` / ``on_train_start`` / ``on_train_end``).  History
   recording, early stopping and checkpointing are themselves callbacks.
@@ -20,11 +23,37 @@ Pieces
   reproduce the pre-engine loss sequences bit-for-bit at fixed seed
   (test-enforced against recorded goldens).
 
+Throughput path (docs/training_api.md "Throughput knobs"):
+
+- the jitted step DONATES ``params``/``opt_state`` (and the sampled
+  batch pytree), so the optimizer update reuses their device buffers
+  instead of allocating fresh ones every iteration;
+- the per-step ``float(loss)`` host sync is LAGGED one iteration
+  (``plan.deferred_sync``): step ``i + 1`` is dispatched while step
+  ``i`` is still in flight, and record ``i`` (loss / eval accuracy /
+  tracked full loss, all device scalars) is read back afterwards.
+  Staging-ring slots therefore recycle one step late and the ring grows
+  by one slot.  Runs with stop targets or checkpoint cadence fall back
+  to the synchronous read (their semantics need the loss on host
+  immediately);
+- compiled steps are CACHED per graph across Trainer instances (keyed
+  by source type, normalized config, optimizer spec and the identity of
+  the device constants), so a ``sweep()`` grid point with the same
+  effective shapes never re-traces; partial batches are padded up to
+  the plan's batch size with masked-out rows so each grid point
+  compiles exactly one step function;
+- evaluation and full-loss tracking run through module-level jitted
+  functions keyed on a normalized config, shared across all Trainers of
+  a sweep.
+
 ``core.experiment`` builds the (b, beta) grid runner on top of this.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
+import warnings
 from typing import Any, Callable as TCallable, List, Optional, Sequence, \
     Tuple
 
@@ -37,7 +66,7 @@ from repro.core import gnn as G
 from repro.core.graph import Graph, to_ell
 from repro.core.metrics import History
 from repro.core.prefetch import HostStagingRing, Prefetcher
-from repro.core.sampler import gather_features, sample_batch
+from repro.core.sampler import FanoutBatch, gather_features, sample_batch
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +76,14 @@ from repro.core.sampler import gather_features, sample_batch
 def _device_ell(graph: Graph, max_deg: Optional[int] = None):
     """Device-resident ELL layout, memoized per graph: evaluation and the
     full-loss tracker used to rebuild (re-pad + re-upload) it on every
-    call.  The cache lives on the Graph instance so it dies with it."""
+    call.  The cache lives on the Graph instance so it dies with it.
+
+    At most ONE ELL key is resident besides the max_deg-independent
+    "base" uploads: inserting a new key evicts the others, so a sweep
+    over distinct ``max_deg`` values no longer accretes one full
+    [n, K] upload per grid point (sources that need a capped ELL to
+    outlive the cache hold their own reference via ``self.ell``).
+    """
     key = int(max_deg or graph.d_max)
     cache = getattr(graph, "_ell_cache", None)
     if cache is None:
@@ -57,6 +93,8 @@ def _device_ell(graph: Graph, max_deg: Optional[int] = None):
         cache["base"] = (jnp.asarray(graph.feats),
                          jnp.asarray(graph.labels))
     if key not in cache:
+        for stale in [k for k in cache if k != "base"]:
+            del cache[stale]
         idx, w, w_self = to_ell(graph, max_deg=max_deg)
         cache[key] = (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(w_self))
     return cache[key] + cache["base"]
@@ -74,13 +112,83 @@ def _device_nodes(graph: Graph, which: str):
     return cache[which]
 
 
+def _static_cfg(cfg: GNNConfig) -> GNNConfig:
+    """Normalize the fields that do NOT affect the traced computation
+    (names, sampler geometry) so the module-level jit caches — eval,
+    full loss, compiled steps — are shared across sweep grid points."""
+    return dataclasses.replace(
+        cfg, name="", source="", batch_size=1,
+        fanout=(1,) * cfg.n_layers, max_degree=1, n_nodes=0, feat_dim=0)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _eval_acc(params, cfg: GNNConfig, idx, w, w_self, feats, labels,
+              nodes):
+    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+    return G.accuracy(logits[nodes], labels[nodes])
+
+
+def _graph_fn_cache(graph: Graph, key, build):
+    """Per-graph compiled-function cache (dies with the graph): sweeps
+    re-create Trainers per grid point, but grid points with the same
+    effective shapes reuse ONE compiled step / full-loss function.
+
+    ``key[-1]`` is the identity tuple of the device constants the
+    function closes over; the entry holds those constants so the ids
+    stay valid while it is alive.  Inserting an entry EVICTS entries
+    for the same logical function with different (stale) constants —
+    e.g. a sweep over distinct ``max_deg`` re-uploads the ELL per grid
+    point, and without eviction each cached closure would pin a full
+    upload on device (the accretion satellite #1 fixed in
+    ``_device_ell`` would just move here).  A FIFO bound caps the rest.
+    """
+    cache = getattr(graph, "_fn_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(graph, "_fn_cache", cache)
+    hit = cache.get(key)
+    if hit is None:
+        hit = build()
+        for stale in [k for k in cache if k[:-1] == key[:-1]]:
+            del cache[stale]
+        while len(cache) >= 16:
+            del cache[next(iter(cache))]
+        cache[key] = hit
+    return hit[0]
+
+
+def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel):
+    """Full-training-objective loss (params -> device scalar), closure
+    over the device ELL (closing over, instead of passing as arguments,
+    keeps the pre-cache jaxpr and therefore the golden full-loss values
+    bit-for-bit)."""
+    scfg = _static_cfg(cfg)
+    key = ("full_loss", scfg, tuple(id(c) for c in ell) + (id(sel),))
+
+    def build():
+        idx, w, w_self, feats, labels = ell
+
+        @jax.jit
+        def full_loss(params):
+            logits = G.full_graph_forward(params, scfg, feats, idx, w,
+                                          w_self)
+            return G.gnn_loss(logits[sel], labels[sel], scfg.loss,
+                              scfg.n_classes)
+
+        return full_loss, (ell, sel)
+
+    return _graph_fn_cache(graph, key, build)
+
+
 def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes
                   ) -> float:
-    """Inference uses ALL neighbors across the entire graph (§4.1)."""
+    """Inference uses ALL neighbors across the entire graph (§4.1).
+    Jitted once per (normalized config, shapes) at module level — NOT
+    per Trainer — so sweeps stop paying eval retrace at every grid
+    point."""
     idx, w, w_self, feats, labels = ell
-    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
-    sel = jnp.asarray(nodes)
-    return float(G.accuracy(logits[sel], labels[sel]))
+    return float(_eval_acc(params, _static_cfg(cfg), idx, w, w_self,
+                           feats, labels, jnp.asarray(nodes)))
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +214,9 @@ class TrainPlan:
     ckpt_every: int = 0
     ckpt_dir: str = "experiments/ckpt"
     seed: int = 0
+    # --- throughput knobs (docs/training_api.md) ---
+    donate: bool = True                 # donate params/opt_state/batch
+    deferred_sync: bool = True          # lag the float(loss) host sync
 
     def make_schedule(self):
         if self.schedule in (None, "constant"):
@@ -127,6 +238,54 @@ class TrainPlan:
                          "repro.optim has: sgd, adamw")
 
 
+def _deferred_mode(plan: TrainPlan) -> bool:
+    """Deferred loss sync needs the loss on host only one step late;
+    stop targets and checkpoint cadence need it immediately."""
+    return (plan.deferred_sync and plan.target_loss is None
+            and plan.target_acc is None and plan.ckpt_every == 0)
+
+
+def _opt_key(plan: TrainPlan) -> Tuple:
+    """The subset of the plan the jitted step's optimizer depends on
+    (n_iters only feeds the cosine schedule's horizon)."""
+    return (plan.optimizer, plan.lr, plan.momentum, plan.weight_decay,
+            plan.schedule, plan.warmup, plan.lr_floor,
+            plan.n_iters if plan.schedule == "cosine" else 0)
+
+
+def _cached_step(graph: Graph, src_cls: type, consts: Tuple,
+                 cfg: GNNConfig, plan: TrainPlan):
+    """Compiled train step, cached ON THE GRAPH across Trainer instances.
+
+    The step closes over ``consts`` (e.g. the ELL tuple — closing over
+    them keeps the pre-cache jaxprs, and therefore the golden loss
+    sequences, bit-for-bit) so the cache key is (source type, normalized
+    config, optimizer spec, donation flag, consts identity).  Because
+    ``_device_ell`` memoizes the device uploads per graph, every grid
+    point of a ``sweep()`` with the same effective shapes hits the same
+    compiled step instead of re-tracing.
+    """
+    scfg = _static_cfg(cfg)
+    key = ("step", src_cls.__qualname__, scfg, _opt_key(plan),
+           plan.donate, tuple(id(c) for c in consts))
+
+    def build():
+        opt = plan.make_optimizer()
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: src_cls._loss_impl(p, batch, consts, scfg)
+            )(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        fn = jax.jit(step,
+                     donate_argnums=(0, 1, 2) if plan.donate else ())
+        return fn, consts
+
+    return _graph_fn_cache(graph, key, build)
+
+
 # ---------------------------------------------------------------------------
 # Batch sources
 # ---------------------------------------------------------------------------
@@ -139,12 +298,22 @@ class BatchSource:
     pairs; ``loss`` is traced inside the Trainer's single jitted step.
     ``done(batch)`` is called once the step consuming the batch has
     completed (host sync point) so sources may recycle staging buffers.
+    ``close()`` is idempotent — the Trainer calls it from a ``finally``
+    and early-stopping callbacks may have raced it already.
+
+    Built-in sources additionally provide the *cacheable* loss form —
+    a ``_loss_impl(params, batch, consts, cfg)`` staticmethod plus
+    ``loss_consts()`` — which lets the engine reuse one compiled step
+    across Trainer instances.  Custom sources only need ``loss``; they
+    fall back to a per-Trainer jit.
     """
 
     #: the per-iteration training loss already IS the full objective
     #: (true for full-graph GD; the History callback uses this).
     loss_is_full_loss = False
     name = "source"
+    #: cacheable loss form; None → per-Trainer jit fallback
+    _loss_impl: Optional[TCallable] = None
 
     def bind(self, graph: Graph, cfg: GNNConfig, plan: TrainPlan
              ) -> "BatchSource":
@@ -152,6 +321,15 @@ class BatchSource:
 
     def loss(self, params, batch):
         raise NotImplementedError
+
+    def loss_consts(self) -> Tuple:
+        """Device constants closed over by the cached step."""
+        return ()
+
+    def node_split(self, which: str):
+        """Device array of a train/val/test node split, laid out however
+        this source's forward expects (sharded sources replicate)."""
+        return _device_nodes(self.graph, which)
 
     def batches(self):
         raise NotImplementedError
@@ -173,6 +351,7 @@ class FullGraphSource(BatchSource):
 
     def __init__(self, max_deg: Optional[int] = None):
         self.max_deg = max_deg
+        self.ell = None
 
     def bind(self, graph, cfg, plan):
         self.graph, self.cfg = graph, cfg
@@ -181,17 +360,101 @@ class FullGraphSource(BatchSource):
         self.n_nodes = len(graph.train_nodes)
         return self
 
+    @staticmethod
+    def _loss_impl(params, batch, consts, cfg: GNNConfig):
+        idx, w, w_self, feats, labels, train_nodes = consts
+        logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+        lt = logits[train_nodes]
+        return G.gnn_loss(lt, labels[train_nodes], cfg.loss,
+                          cfg.n_classes)
+
+    def loss_consts(self):
+        return tuple(self.ell) + (self.train_nodes,)
+
     def loss(self, params, batch):
-        idx, w, w_self, feats, labels = self.ell
-        logits = G.full_graph_forward(params, self.cfg, feats, idx, w,
-                                      w_self)
-        lt = logits[self.train_nodes]
-        return G.gnn_loss(lt, labels[self.train_nodes], self.cfg.loss,
-                          self.cfg.n_classes)
+        return type(self)._loss_impl(params, batch, self.loss_consts(),
+                                     self.cfg)
 
     def batches(self):
         while True:
             yield None, self.n_nodes
+
+    def close(self) -> None:
+        # idempotent: drop the device ELL reference (the per-graph cache
+        # keeps at most one resident key; sources release theirs here)
+        self.ell = None
+
+
+class ShardedFullGraphSource(FullGraphSource):
+    """Full-graph GD with the ELL rows laid out over the ``NODES`` axis
+    of a local device mesh (``NamedSharding`` row sharding), so the
+    paper's (b=n, beta=d_max) limit runs data-parallel over all local
+    devices — rows are padded with zero-weight entries up to a multiple
+    of the mesh size, and the node splits are replicated so the same
+    jitted eval/step functions serve every device.
+
+    On a 1-device mesh this produces the exact same loss sequence as
+    ``FullGraphSource`` (test-enforced); on an N-device mesh XLA GSPMD
+    partitions the forward (the [n, K] gathers all-gather the layer
+    activations) and all-reduces the gradients.
+    """
+
+    name = "fullgraph_sharded"
+
+    def __init__(self, max_deg: Optional[int] = None, mesh=None):
+        super().__init__(max_deg)
+        self.mesh = mesh
+
+    def bind(self, graph, cfg, plan):
+        from repro import sharding as sh
+        self.graph, self.cfg = graph, cfg
+        mesh = self.mesh if self.mesh is not None else sh.node_mesh()
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        if cfg.use_agg_kernel and n_dev > 1:
+            raise ValueError(
+                "ShardedFullGraphSource: use_agg_kernel is single-device "
+                "only (the Pallas gather does not partition over the "
+                "NODES axis yet) — run the einsum path on a mesh")
+        # memoized per graph like _device_ell (same one-resident-key
+        # eviction): a sweep over sharded grid points reuses ONE upload
+        # and therefore ONE compiled step (the step cache keys on the
+        # consts' identity)
+        key = (tuple(d.id for d in mesh.devices.flat),
+               int(self.max_deg or graph.d_max))
+        cache = getattr(graph, "_sharded_ell_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(graph, "_sharded_ell_cache", cache)
+        if key not in cache:
+            cache.clear()
+            idx, w, w_self = to_ell(graph, max_deg=self.max_deg)
+            feats, labels = graph.feats, graph.labels
+            pad = (-graph.n) % n_dev
+            if pad:               # zero-weight rows aggregate to zero
+                idx = np.pad(idx, ((0, pad), (0, 0)))
+                w = np.pad(w, ((0, pad), (0, 0)))
+                w_self = np.pad(w_self, (0, pad))
+                feats = np.pad(feats, ((0, pad), (0, 0)))
+                labels = np.pad(labels, (0, pad))
+            rows2 = sh.named((sh.NODES, None), mesh)
+            rows1 = sh.named((sh.NODES,), mesh)
+            repl = sh.named((None,), mesh)
+            ell = (jax.device_put(np.ascontiguousarray(idx), rows2),
+                   jax.device_put(np.ascontiguousarray(w), rows2),
+                   jax.device_put(np.ascontiguousarray(w_self), rows1),
+                   jax.device_put(np.ascontiguousarray(feats), rows2),
+                   jax.device_put(np.ascontiguousarray(labels), rows1))
+            cache[key] = (ell, repl, {})
+        self.ell, self._repl, self._splits = cache[key]
+        self.train_nodes = self.node_split("train")
+        self.n_nodes = len(graph.train_nodes)
+        return self
+
+    def node_split(self, which: str):
+        if which not in self._splits:
+            self._splits[which] = jax.device_put(
+                getattr(self.graph, f"{which}_nodes"), self._repl)
+        return self._splits[which]
 
 
 class SampledSource(BatchSource):
@@ -201,14 +464,21 @@ class SampledSource(BatchSource):
 
     Device uploads go through a ``HostStagingRing``: host staging buffers
     are allocated ONCE per shape and recycled across batches (the ring
-    slot is released in ``done`` once the consuming step has synced).
-    Hop features are gathered DIRECTLY into the slot's buffers
-    (``np.take(..., out=)``) and masks cast bool->f32 in place, so the
-    plain path's fresh per-batch allocations disappear; with ``prefetch``
-    that staging work runs on the Prefetcher's worker thread, off the
-    device step's critical path.  The whole batch then ships as a single
-    ``jax.device_put`` pytree transfer instead of ~4·n_layers separate
-    ``jnp.asarray`` uploads."""
+    slot is released in ``done`` once the consuming step has synced; with
+    the engine's deferred loss sync that release lags one extra step, so
+    the ring grows by one slot).  Hop features are gathered DIRECTLY into
+    the slot's buffers (``np.take(..., out=)``) and masks cast bool->f32
+    in place, so the plain path's fresh per-batch allocations disappear;
+    with ``prefetch`` that staging work runs on the Prefetcher's worker
+    thread, off the device step's critical path.  The whole batch then
+    ships as a single ``jax.device_put`` pytree transfer instead of
+    ~4·n_layers separate ``jnp.asarray`` uploads.
+
+    When the graph has fewer training nodes than the configured batch
+    size, every batch is PADDED up to ``batch_size`` with masked-out
+    rows (zero weights, zero labels, a validity column), so the grid
+    point still compiles exactly one step function; the masked loss
+    matches the unpadded mean up to float summation order."""
 
     name = "minibatch"
 
@@ -232,36 +502,74 @@ class SampledSource(BatchSource):
         assert len(self.fanouts) == cfg.n_layers
         self.n_iters = plan.n_iters
         self.seed = plan.seed
+        self.pad = max(0, self.b - len(graph.train_nodes))
         self._inflight = []
         if self.reuse_buffers:
             # slots outnumber in-flight batches: queue depth + the batch
-            # on the device + the one being staged on the worker
-            self._ring = HostStagingRing(self.depth + 2)
+            # on the device + the one being staged on the worker (+ one
+            # more when the engine recycles a step late under deferred
+            # loss sync)
+            extra = 1 if _deferred_mode(plan) else 0
+            self._ring = HostStagingRing(self.depth + 2 + extra)
         return self
 
+    @staticmethod
+    def _loss_impl(params, batch, consts, cfg: GNNConfig):
+        if len(batch) == 6:              # padded batch: masked mean
+            feats, masks, weights, self_w, labels, valid = batch
+        else:
+            feats, masks, weights, self_w, labels = batch
+            valid = None
+        logits = G.minibatch_forward(params, cfg, feats, masks, weights,
+                                     self_w)
+        return G.gnn_loss(logits, labels, cfg.loss, cfg.n_classes,
+                          valid=valid)
+
     def loss(self, params, batch):
-        feats, masks, weights, self_w, labels = batch
-        logits = G.minibatch_forward(params, self.cfg, feats, masks,
-                                     weights, self_w)
-        return G.gnn_loss(logits, labels, self.cfg.loss,
-                          self.cfg.n_classes)
+        return type(self)._loss_impl(params, batch, (), self.cfg)
 
     # -- host-side batch assembly --------------------------------------
+    def _pad_batch(self, fb: FanoutBatch) -> FanoutBatch:
+        """Pad the target-node axis up to ``self.b`` with masked-out rows
+        so every batch of this grid point has ONE compiled shape."""
+        p = self.b - fb.batch_size
+        if p <= 0:
+            return fb
+
+        def padrow(a):
+            return np.pad(a, [(0, p)] + [(0, 0)] * (a.ndim - 1))
+
+        return FanoutBatch(
+            nodes=[padrow(x) for x in fb.nodes],
+            masks=[padrow(m) for m in fb.masks],
+            weights=[padrow(w) for w in fb.weights],
+            self_w=[padrow(s) for s in fb.self_w],
+            labels=padrow(fb.labels))
+
     def _host_batch(self, graph, fb):
         """Host tuple for one batch.  Returns ``(slot, host_tree)`` —
         slot is -1 on the plain (no-ring) path.  Runs on the Prefetcher
         worker thread when prefetching."""
+        valid_n = fb.batch_size
+        fb = self._pad_batch(fb)
+        extra: Tuple = ()
+        if self.pad:
+            valid = np.zeros(self.b, np.float32)
+            valid[:valid_n] = 1.0
+            extra = (valid,)
         if self._ring is None:
             feats = gather_features(graph, fb)
             masks = [m.astype(np.float32) for m in fb.masks]
-            return -1, (feats, masks, fb.weights, fb.self_w, fb.labels)
+            return -1, (feats, masks, fb.weights, fb.self_w,
+                        fb.labels) + extra
         fd = graph.feats.shape[1]
         specs = ([(ids.shape + (fd,), graph.feats.dtype)
                   for ids in fb.nodes]
                  + [(m.shape, np.float32) for m in fb.masks]
                  + [(w.shape, w.dtype) for w in fb.weights]
                  + [(s.shape, s.dtype) for s in fb.self_w]
-                 + [(fb.labels.shape, fb.labels.dtype)])
+                 + [(fb.labels.shape, fb.labels.dtype)]
+                 + [(v.shape, v.dtype) for v in extra])
         slot = self._ring.acquire()
         bufs = iter(self._ring.buffers(slot, specs))
         feats = []
@@ -285,7 +593,13 @@ class SampledSource(BatchSource):
             small.append(out)
         labels = next(bufs)
         np.copyto(labels, fb.labels)
-        return slot, (feats, masks, small[0], small[1], labels)
+        tail = []
+        for v in extra:
+            buf = next(bufs)
+            np.copyto(buf, v)
+            tail.append(buf)
+        return slot, (feats, masks, small[0], small[1], labels) \
+            + tuple(tail)
 
     def _to_device(self, payload):
         """One device_put for the whole batch; the ring slot joins an
@@ -320,11 +634,13 @@ class SampledSource(BatchSource):
             self._ring.release(self._inflight.pop(0))
 
     def close(self) -> None:
+        # idempotent: an early-stopping callback and the Trainer's
+        # finally may both land here without racing the worker thread
         if self._ring is not None:
             self._ring.close()     # wakes a worker blocked in acquire()
         if self._pf is not None:
-            self._pf.close()
-            self._pf = None
+            pf, self._pf = self._pf, None
+            pf.close()
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +660,7 @@ class TrainState:
     opt_state: Any = None
     loss: float = float("nan")        # this iteration's training loss
     val_acc: Optional[float] = None   # this iteration's eval (None = none)
+    full_loss: Optional[float] = None  # precomputed tracked full loss
     n_nodes: int = 0                  # target nodes in this batch
     full_loss_fn: Optional[TCallable] = None   # params -> full objective
     stop: bool = False
@@ -356,7 +673,13 @@ class TrainState:
 
 class Callback:
     """Hooks fire in list order; ``on_eval`` only on eval iterations,
-    ``on_stop`` once when any callback requested a stop."""
+    ``on_stop`` once when any callback requested a stop.
+
+    Reading ``state.params`` inside a hook is always safe; a hook that
+    RETAINS the arrays past its return must copy them first
+    (``jax.tree.map(jnp.copy, state.params)``) — with the default
+    ``plan.donate`` the next step donates those buffers (see
+    docs/training_api.md "Throughput knobs")."""
 
     def on_train_start(self, state: TrainState) -> None: ...
 
@@ -372,7 +695,9 @@ class Callback:
 class HistoryCallback(Callback):
     """Absorbs the loops' metric recording: per-iteration History rows
     plus full-objective tracking (every iteration for full-graph GD,
-    every ``track_full_loss_every`` iterations for mini-batch)."""
+    every ``track_full_loss_every`` iterations for mini-batch; the
+    Trainer pre-dispatches the tracked value on those iterations so the
+    deferred-sync pipeline stays unbroken — ``state.full_loss``)."""
 
     def on_train_start(self, state):
         state.history.start()
@@ -386,8 +711,9 @@ class HistoryCallback(Callback):
             state.history.full_loss_iters.append(state.it + 1)
         elif (state.plan.track_full_loss_every
               and state.it % state.plan.track_full_loss_every == 0):
-            state.history.full_losses.append(
-                float(state.full_loss_fn(state.params)))
+            fl = (state.full_loss if state.full_loss is not None
+                  else float(state.full_loss_fn(state.params)))
+            state.history.full_losses.append(fl)
             state.history.full_loss_iters.append(state.it + 1)
 
 
@@ -450,10 +776,13 @@ class TrainResult:
 class Trainer:
     """The single training engine both paradigms run through.
 
-    Per iteration: jitted step (value_and_grad over ``source.loss`` +
-    optimizer update) -> periodic full-neighborhood eval -> ``on_step``
-    callbacks (History / early-stop / checkpoint) -> ``on_eval`` on eval
-    iterations -> break when any callback requested a stop.
+    Per iteration: jitted step (value_and_grad over the source's loss +
+    optimizer update, params/opt_state/batch donated) -> periodic
+    full-neighborhood eval -> ``on_step`` callbacks (History /
+    early-stop / checkpoint) -> ``on_eval`` on eval iterations -> break
+    when any callback requested a stop.  With ``plan.deferred_sync``
+    the host-side readback of a record lags one iteration so the next
+    step dispatches while the previous one is still in flight.
     """
 
     def __init__(self, graph: Graph, cfg: GNNConfig, plan: TrainPlan,
@@ -466,47 +795,73 @@ class Trainer:
                           else default_callbacks(plan))
         self.callbacks += list(extra_callbacks)
         self.opt = plan.make_optimizer()
+        self._scfg = _static_cfg(cfg)
         # evaluation + full-loss tracking reuse the source's ELL when it
         # has one (FullGraphSource with max_deg: eval on the SAME capped
         # adjacency the old loop used, and no second full-width upload)
         self._ell = getattr(self.source, "ell", None) or _device_ell(graph)
 
-        src = self.source
+        if type(self.source)._loss_impl is not None:
+            # built-in sources: one compiled step per (source type,
+            # normalized cfg, optimizer spec, consts) PER GRAPH — shared
+            # across every Trainer a sweep creates
+            self._step = _cached_step(graph, type(self.source),
+                                      self.source.loss_consts(), cfg,
+                                      plan)
+        else:
+            # custom source: per-Trainer jit over the instance loss
+            src, opt = self.source, self.opt
 
-        @jax.jit
-        def step(params, opt_state, batch):
-            loss, grads = jax.value_and_grad(
-                lambda p: src.loss(p, batch))(params)
-            params, opt_state = self.opt.update(grads, opt_state, params)
-            return params, opt_state, loss
+            def step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: src.loss(p, batch))(params)
+                params, opt_state = opt.update(grads, opt_state, params)
+                return params, opt_state, loss
 
-        self._step = step
-
-        idx_e, w_e, ws_e, feats_e, labels_e = self._ell
-        train_sel = _device_nodes(graph, "train")
-
-        @jax.jit
-        def full_loss(params):
-            logits = G.full_graph_forward(params, cfg, feats_e, idx_e,
-                                          w_e, ws_e)
-            return G.gnn_loss(logits[train_sel], labels_e[train_sel],
-                              cfg.loss, cfg.n_classes)
-
-        self._full_loss = full_loss
+            self._step = jax.jit(
+                step, donate_argnums=(0, 1) if plan.donate else ())
 
     # ------------------------------------------------------------------
+    def _eval_dev(self, params, nodes):
+        idx, w, w_self, feats, labels = self._ell
+        return _eval_acc(params, self._scfg, idx, w, w_self, feats,
+                         labels, nodes)
+
+    def _full_loss_dev(self, params):
+        return _cached_full_loss(self.graph, self.cfg, self._ell,
+                                 self.source.node_split("train"))(params)
+
     def evaluate(self, params, nodes) -> float:
-        return evaluate_full(params, self.cfg, self.graph, self._ell,
-                             nodes)
+        return float(self._eval_dev(params, jnp.asarray(nodes)))
 
     def full_train_loss(self, params) -> float:
-        return float(self._full_loss(params))
+        return float(self._full_loss_dev(params))
+
+    def close(self) -> None:
+        """Release device references held by this Trainer (the per-graph
+        ELL/step caches keep at most one resident entry; sweeps call
+        this between grid points)."""
+        self._ell = None
+        self.source.close()
 
     def _fire(self, hook: str, state: TrainState) -> None:
         for cb in self.callbacks:
             getattr(cb, hook)(state)
 
     # ------------------------------------------------------------------
+    def _consume(self, rec, state: TrainState) -> None:
+        """Read one step record back to host and fire its callbacks."""
+        it, loss, val, fl, n_nodes, batch = rec
+        state.it = it
+        state.loss = float(loss)           # host sync: step finished
+        state.val_acc = float(val) if val is not None else None
+        state.full_loss = float(fl) if fl is not None else None
+        state.n_nodes = n_nodes
+        self.source.done(batch)            # staging slot recyclable
+        self._fire("on_step", state)
+        if state.val_acc is not None:
+            self._fire("on_eval", state)
+
     def run(self) -> TrainResult:
         graph, cfg, plan = self.graph, self.cfg, self.plan
         key = jax.random.key(plan.seed)
@@ -516,31 +871,56 @@ class Trainer:
         state = TrainState(graph=graph, cfg=cfg, plan=plan,
                            source=self.source, history=History(),
                            params=params, opt_state=opt_state,
-                           full_loss_fn=self._full_loss)
+                           full_loss_fn=self._full_loss_dev)
         self._fire("on_train_start", state)
+        deferred = _deferred_mode(plan)
+        track = plan.track_full_loss_every
+        track_full = track and not self.source.loss_is_full_loss
+        pending = None
         try:
-            val_sel = _device_nodes(graph, "val")
+            val_sel = self.source.node_split("val")
             stream = self.source.batches()
             for it in range(plan.n_iters):
                 batch, n_nodes = next(stream)
-                params, opt_state, loss = self._step(params, opt_state,
-                                                     batch)
-                val = (self.evaluate(params, val_sel)
+                # tracing happens on the first call; the donated batch
+                # pytree has no batch-shaped output to alias into, so
+                # XLA reports it "not usable" — expected, suppressed
+                # ONLY around the tracing call so real params/opt_state
+                # donation misses stay visible
+                with contextlib.ExitStack() as stack:
+                    if it == 0:
+                        stack.enter_context(warnings.catch_warnings())
+                        warnings.filterwarnings(
+                            "ignore",
+                            message="Some donated buffers were not usable")
+                    params, opt_state, loss = self._step(params,
+                                                         opt_state, batch)
+                # eval / tracked full loss are DISPATCHED here (device
+                # scalars); the floats are read in _consume
+                val = (self._eval_dev(params, val_sel)
                        if it % plan.eval_every == 0 else None)
-                state.it, state.params, state.opt_state = it, params, \
-                    opt_state
-                state.loss = float(loss)       # host sync: step finished
-                state.val_acc, state.n_nodes = val, n_nodes
-                self.source.done(batch)        # staging slot recyclable
-                self._fire("on_step", state)
-                if val is not None:
-                    self._fire("on_eval", state)
+                fl = (self._full_loss_dev(params)
+                      if track_full and it % track == 0 else None)
+                rec = (it, loss, val, fl, n_nodes, batch)
+                state.params, state.opt_state = params, opt_state
+                if deferred:
+                    # lagged sync: read record i-1 while step i flies
+                    prev, pending = pending, rec
+                    if prev is not None:
+                        self._consume(prev, state)
+                else:
+                    self._consume(rec, state)
                 if state.stop:
-                    self._fire("on_stop", state)
                     break
+            if pending is not None:
+                # drain the lagged record so History stays aligned with
+                # the params actually returned
+                self._consume(pending, state)
+            if state.stop:
+                self._fire("on_stop", state)
+            acc = self.evaluate(params, self.source.node_split("test"))
+            state.params = params
+            self._fire("on_train_end", state)
         finally:
             self.source.close()
-        acc = self.evaluate(params, _device_nodes(graph, "test"))
-        state.params = params
-        self._fire("on_train_end", state)
         return TrainResult(params, state.history, acc, state.stop_reason)

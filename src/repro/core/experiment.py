@@ -27,8 +27,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import GNNConfig
 from repro.core.engine import (BatchSource, Callback, FullGraphSource,
-                               SampledSource, Trainer, TrainPlan,
-                               TrainResult)
+                               SampledSource, ShardedFullGraphSource,
+                               Trainer, TrainPlan, TrainResult)
 from repro.core.graph import Graph
 from repro.core.metrics import (iteration_to_accuracy, iteration_to_loss,
                                 iteration_to_full_loss,
@@ -66,6 +66,21 @@ def metrics_row(res: TrainResult, target_loss: Optional[float] = None,
     return row
 
 
+def make_source(paradigm: str, b: Optional[int] = None,
+                fanouts: Optional[Sequence[int]] = None) -> BatchSource:
+    """The one paradigm-name -> BatchSource mapping (shared by
+    run_experiment and benchmarks/bench_engine.py)."""
+    if paradigm == "fullgraph":
+        return FullGraphSource()
+    if paradigm == "fullgraph_sharded":
+        return ShardedFullGraphSource()
+    if paradigm == "minibatch":
+        return SampledSource(batch_size=b, fanouts=fanouts)
+    raise ValueError(
+        f"paradigm must be 'fullgraph', 'fullgraph_sharded' or "
+        f"'minibatch', got {paradigm!r}")
+
+
 def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                    paradigm: str = "minibatch",
                    b: Optional[int] = None,
@@ -93,20 +108,17 @@ def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
             fanout=cfg.fanout if fanouts is None else tuple(fanouts))
     cfg.validate()
     if source is None:
-        if paradigm == "fullgraph":
-            source = FullGraphSource()
-        elif paradigm == "minibatch":
-            source = SampledSource(batch_size=b, fanouts=fanouts)
-        else:
-            raise ValueError(
-                f"paradigm must be 'fullgraph' or 'minibatch', "
-                f"got {paradigm!r}")
-    res = Trainer(graph, cfg, plan, source=source,
-                  extra_callbacks=callbacks).run()
+        source = make_source(paradigm, b=b, fanouts=fanouts)
+    trainer = Trainer(graph, cfg, plan, source=source,
+                      extra_callbacks=callbacks)
+    try:
+        res = trainer.run()
+    finally:
+        trainer.close()      # release device refs between grid points
     # label the row from the source that actually ran (bind() resolved
     # its b/fanouts), not from the `paradigm` string it may override
     name = getattr(source, "name", "custom")
-    if name == "fullgraph":
+    if name.startswith("fullgraph"):
         spec = {"paradigm": name, "b": len(graph.train_nodes),
                 "fanouts": f"d_max={graph.d_max}"}
     else:

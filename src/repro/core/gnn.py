@@ -58,36 +58,45 @@ def init_gnn(key, cfg: GNNConfig, feat_dim: int) -> List[Dict[str, Any]]:
 # layer primitives (shared by both paths)
 # ---------------------------------------------------------------------------
 
-def _kernel_agg(cfg: GNNConfig, table, idx, w):
-    """Σ_k w[b,k] · table[idx[b,k]] via the batch-tiled Pallas kernel."""
+def _kernel_agg(cfg: GNNConfig, table, idx, w, self_rows=None,
+                w_self=None):
+    """Σ_k w[b,k] · table[idx[b,k]] (+ fused w_self[b] · self_rows[b]
+    epilogue) via the batch-tiled, double-buffered Pallas kernel."""
     from repro.kernels.neighbor_agg.ops import neighbor_agg
-    return neighbor_agg(table, idx, w, use_kernel=True, kernel="tiled",
+    return neighbor_agg(table, idx, w, self_rows, w_self,
+                        use_kernel=True, kernel="tiled",
                         interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
                         d_tile=cfg.agg_d_tile, k_slab=cfg.agg_k_slab)
 
 
-def _wsum(cfg: GNNConfig, w_edge, h_nb):
+def _wsum(cfg: GNNConfig, w_edge, h_nb, h_self=None, w_self=None):
     """Weighted neighbor sum over ALREADY-GATHERED features:
-    out[..., :] = Σ_k w_edge[..., k] * h_nb[..., k, :].
+    out[..., :] = Σ_k w_edge[..., k] * h_nb[..., k, :]
+                  [+ w_self[...] * h_self[..., :]].
 
     With cfg.use_agg_kernel the fan-out tree is flattened to a [B*K, d]
     table + identity ids so the mini-batch path exercises the same tiled
-    kernel (zero-weight padding edges stay exact)."""
+    kernel (zero-weight padding edges stay exact); the optional self
+    term rides the kernel's fused accumulator-init epilogue instead of
+    a separate output-sized elementwise pass."""
+    fused = h_self is not None
     if not cfg.use_agg_kernel:
-        return jnp.einsum("...k,...kd->...d", w_edge, h_nb)
+        out = jnp.einsum("...k,...kd->...d", w_edge, h_nb)
+        return out + w_self[..., None] * h_self if fused else out
     k, d = h_nb.shape[-2], h_nb.shape[-1]
     lead = h_nb.shape[:-2]
     table = h_nb.reshape(-1, d)
     b = table.shape[0] // k
     idx = jnp.arange(b * k, dtype=jnp.int32).reshape(b, k)
-    out = _kernel_agg(cfg, table, idx, w_edge.reshape(b, k))
+    out = _kernel_agg(cfg, table, idx, w_edge.reshape(b, k),
+                      self_rows=h_self.reshape(b, d) if fused else None,
+                      w_self=w_self.reshape(b) if fused else None)
     return out.reshape(lead + (d,))
 
 
 def _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self):
     """h_self [..., d]; h_nb [..., K, d]; w_edge [..., K]; w_self [...]."""
-    agg = _wsum(cfg, w_edge, h_nb) + w_self[..., None] * h_self
-    return agg @ p["w"]
+    return _wsum(cfg, w_edge, h_nb, h_self, w_self) @ p["w"]
 
 
 def _sage_layer(cfg, p, h_self, h_nb, mask):
@@ -179,7 +188,16 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
             w = p["w"]
             pre = w.shape[1] < h.shape[1]
             src = (h @ w) if pre else h
-            agg = agg_w(src, ell_w) + w_self[:, None] * src
+            if cfg.use_agg_kernel:
+                # fused epilogue: the self row IS the source table row b,
+                # so the kernel consumes the same replicated table twice
+                srcr = replicate(src)
+                agg = _kernel_agg(cfg, srcr, ell_idx,
+                                  ell_w.astype(agg_dt), self_rows=srcr,
+                                  w_self=w_self.astype(agg_dt)
+                                  ).astype(h.dtype)
+            else:
+                agg = agg_w(src, ell_w) + w_self[:, None] * src
             out = agg if pre else agg @ w
         elif cfg.model == "graphsage":
             wn = p["w_neigh"]
@@ -224,15 +242,23 @@ def minibatch_forward(params, cfg: GNNConfig, hop_feats: Sequence,
 # losses (paper: CE and MSE, §3)
 # ---------------------------------------------------------------------------
 
-def gnn_loss(logits, labels, kind: str, n_classes: int):
+def gnn_loss(logits, labels, kind: str, n_classes: int, valid=None):
+    """CE / MSE over target rows.  ``valid`` (float 0/1 per row, or
+    None) masks padded rows out of the mean: padded rows contribute
+    exact zeros and the divisor is the valid count, so the result
+    matches the unpadded mean up to float summation order."""
     if kind == "mse":
         onehot = jax.nn.one_hot(labels, n_classes, dtype=F32)
-        return 0.5 * jnp.mean(jnp.sum(
-            jnp.square(logits.astype(F32) - onehot), axis=-1))
+        rows = jnp.sum(jnp.square(logits.astype(F32) - onehot), axis=-1)
+        if valid is None:
+            return 0.5 * jnp.mean(rows)
+        return 0.5 * (jnp.sum(rows * valid) / jnp.sum(valid))
     logz = jax.scipy.special.logsumexp(logits.astype(F32), axis=-1)
     ll = jnp.take_along_axis(logits.astype(F32), labels[..., None],
                              axis=-1)[..., 0]
-    return jnp.mean(logz - ll)
+    if valid is None:
+        return jnp.mean(logz - ll)
+    return jnp.sum((logz - ll) * valid) / jnp.sum(valid)
 
 
 def accuracy(logits, labels):

@@ -36,11 +36,13 @@ class HostStagingRing:
     the slot's once-allocated buffers for producers to FILL in place
     (``np.take(..., out=)`` gathers, in-place dtype casts — no per-batch
     allocation and no extra copy); ``release(slot)`` makes the slot
-    reusable once the consuming step has synced.  Slot handout is a
-    blocking queue, so a producer that runs ahead of ``release``
-    backpressures instead of overwriting in-flight data.  Thread-safe:
-    acquire/release may run on different threads; ``close()`` wakes any
-    blocked ``acquire``.
+    reusable once the consuming step has synced.  Under the engine's
+    deferred loss sync that release lags ONE extra step (records are
+    read back after the next step dispatches), so the engine sizes the
+    ring one slot larger.  Slot handout is a blocking queue, so a
+    producer that runs ahead of ``release`` backpressures instead of
+    overwriting in-flight data.  Thread-safe: acquire/release may run on
+    different threads; ``close()`` wakes any blocked ``acquire``.
     """
 
     def __init__(self, n_slots: int):

@@ -17,18 +17,34 @@ Two variants:
   reference shape; every step pays one DMA issue + one weight-block load
   for a single accumulated row.
 
-* `neighbor_agg_pallas_tiled` — batch-tiled: each grid step owns a
-  (b_tile, d_tile) OUTPUT block and a K-slab of k_slab neighbors, grid
-  (B // b_tile, D // d_tile, K // k_slab).  The b_tile * k_slab row DMAs
-  of a step are issued together (overlapped in hardware), the weight
-  block (b_tile, k_slab) is loaded once per step instead of once per
-  (row, k) pair, and the accumulator tile amortizes its init/flush over
-  b_tile rows.  Zero-weight padding rows DMA like any other row but
-  contribute exactly 0, so masked/padded inputs stay exact.
+* `neighbor_agg_pallas_tiled` — batch-tiled AND pipelined: each grid
+  step owns a (b_tile, d_tile) OUTPUT block and a K-slab of k_slab
+  neighbors, grid (B // b_tile, D // d_tile, K // k_slab).  The
+  b_tile * k_slab row DMAs of a slab are issued together (overlapped in
+  hardware), the weight block (b_tile, k_slab) is loaded once per step
+  instead of once per (row, k) pair, and the accumulator tile amortizes
+  its init/flush over b_tile rows.  Zero-weight padding rows DMA like
+  any other row but contribute exactly 0, so masked/padded inputs stay
+  exact.
+
+  Slab DMAs are DOUBLE-BUFFERED across the (innermost, sequential) K
+  grid axis: the row buffer and its DMA semaphores carry a leading
+  2-slot axis, slab ki lives in slot ki % 2, and while step ki
+  accumulates its slab the DMAs for slab ki + 1 are already in flight
+  into the other slot (flash_attn-style block pipelining).  Only the
+  FIRST slab of each (bi, di) output tile is an exposed wait; every
+  other slab's HBM latency hides behind the previous slab's FMAs.
+
+  Optional fused epilogue: with `self_rows`/`w_self` the accumulator
+  initializes to w_self[b] * self_rows[b, :] instead of zeros, so the
+  callers' separate `w_self * h_self` elementwise pass (and its extra
+  output-sized HBM round trip) disappears; a bias row would fold into
+  the same init.
 
 VMEM working set per tiled step:
-rows (k_slab, b_tile, d_tile) + acc (b_tile, d_tile) + weights
-(b_tile, k_slab) — keep b_tile * d_tile * (k_slab + 1) * 4B under ~2 MB.
+rows (2, k_slab, b_tile, d_tile) + acc (b_tile, d_tile) + weights
+(b_tile, k_slab) [+ self tile (b_tile, d_tile) + w_self (b_tile, 1)] —
+keep b_tile * d_tile * (2 * k_slab + 2) * 4B under ~2 MB.
 """
 from __future__ import annotations
 
@@ -110,36 +126,61 @@ def neighbor_agg_pallas(feats, idx, w, *, d_tile: int = 128,
 # batch-tiled kernel: (b_tile, d_tile) output block, K-slab per step
 # ---------------------------------------------------------------------------
 
-def _make_tiled_kernel(b_tile: int, d_tile: int, k_slab: int, k_total: int):
-    def kernel(idx_ref, w_ref, feat_ref, out_ref, rows_ref, acc_ref, sems):
+def _make_tiled_kernel(b_tile: int, d_tile: int, k_slab: int, k_total: int,
+                       fuse_self: bool):
+    def kernel(idx_ref, w_ref, *refs):
+        if fuse_self:
+            wself_ref, self_ref, feat_ref, out_ref, rows_ref, acc_ref, \
+                sems = refs
+        else:
+            feat_ref, out_ref, rows_ref, acc_ref, sems = refs
         bi = pl.program_id(0)
         di = pl.program_id(1)
         ki = pl.program_id(2)
         nk = pl.num_programs(2)
 
+        def slab_copies(slab, slot):
+            """The b_tile * k_slab row DMAs of K-slab `slab` into
+            double-buffer slot `slot` (software gather: the
+            scalar-prefetched ids address HBM rows directly)."""
+            copies = []
+            for j in range(k_slab):
+                for i in range(b_tile):
+                    nid = idx_ref[(bi * b_tile + i) * k_total
+                                  + slab * k_slab + j]
+                    copies.append(pltpu.make_async_copy(
+                        feat_ref.at[nid, pl.ds(di * d_tile, d_tile)],
+                        rows_ref.at[slot, j, i, :],
+                        sems.at[slot, j, i]))
+            return copies
+
+        # two-slot rotation: slab s lives in slot s % 2.  The first slab
+        # of each output tile is started here (exposed wait); every later
+        # slab was prefetched by the PREVIOUS step and is already in
+        # flight while that step accumulated.
         @pl.when(ki == 0)
         def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
+            for c in slab_copies(0, 0):
+                c.start()
+            if fuse_self:    # fused epilogue: acc starts at w_self * self
+                acc_ref[...] = wself_ref[...].astype(jnp.float32) \
+                    * self_ref[...].astype(jnp.float32)
+            else:
+                acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        # issue all b_tile * k_slab row DMAs up front (software gather:
-        # the scalar-prefetched ids address HBM rows directly), then wait
-        dmas = []
-        for j in range(k_slab):
-            for i in range(b_tile):
-                nid = idx_ref[(bi * b_tile + i) * k_total + ki * k_slab + j]
-                dma = pltpu.make_async_copy(
-                    feat_ref.at[nid, pl.ds(di * d_tile, d_tile)],
-                    rows_ref.at[j, i, :],
-                    sems.at[j, i])
-                dma.start()
-                dmas.append(dma)
-        for dma in dmas:
-            dma.wait()
+        @pl.when(ki + 1 < nk)
+        def _prefetch_next():
+            for c in slab_copies(ki + 1, (ki + 1) % 2):
+                c.start()
+
+        for c in slab_copies(ki, ki % 2):
+            c.wait()
 
         w_blk = w_ref[...].astype(jnp.float32)        # [b_tile, k_slab]
+        slot = ki % 2
         for j in range(k_slab):
             acc_ref[...] += w_blk[:, j:j + 1] \
-                * rows_ref[j].astype(jnp.float32)
+                * rows_ref[slot, j].astype(jnp.float32)
 
         @pl.when(ki == nk - 1)
         def _flush():
@@ -148,11 +189,15 @@ def _make_tiled_kernel(b_tile: int, d_tile: int, k_slab: int, k_total: int):
     return kernel
 
 
-def neighbor_agg_pallas_tiled(feats, idx, w, *, b_tile: int = 8,
-                              d_tile: int = 128, k_slab: int = 4,
-                              interpret: bool = True):
-    """Batch-tiled software gather: feats [N, D]; idx [B, K] int32;
-    w [B, K] (0 ⇒ padding edge, exact).  Returns [B, D].
+def neighbor_agg_pallas_tiled(feats, idx, w, *, self_rows=None, w_self=None,
+                              b_tile: int = 8, d_tile: int = 128,
+                              k_slab: int = 4, interpret: bool = True):
+    """Batch-tiled, double-buffered software gather: feats [N, D];
+    idx [B, K] int32; w [B, K] (0 ⇒ padding edge, exact).  Returns [B, D].
+
+    With `self_rows` [B, D] + `w_self` [B] the epilogue
+    out[b] += w_self[b] * self_rows[b] is fused into the accumulator
+    init (both must be given together).
 
     B % b_tile == 0, D % d_tile == 0, K % k_slab == 0 (ops.py pads all
     three; padded rows/edges carry zero weight).
@@ -162,32 +207,48 @@ def neighbor_agg_pallas_tiled(feats, idx, w, *, b_tile: int = 8,
     assert b % b_tile == 0, (b, b_tile)
     assert d % d_tile == 0, (d, d_tile)
     assert k % k_slab == 0, (k, k_slab)
+    fuse_self = self_rows is not None
+    assert fuse_self == (w_self is not None), \
+        "self_rows and w_self must be passed together"
     grid = (b // b_tile, d // d_tile, k // k_slab)
+
+    in_specs = [
+        # the (b_tile, k_slab) weight block — ONE load per grid step
+        pl.BlockSpec((b_tile, k_slab),
+                     lambda bi, di, ki, idx_p: (bi, ki)),
+    ]
+    operands = [w]
+    if fuse_self:
+        in_specs += [
+            # w_self as a (b_tile, 1) column, self rows as the same
+            # (b_tile, d_tile) block shape as the output tile
+            pl.BlockSpec((b_tile, 1), lambda bi, di, ki, idx_p: (bi, 0)),
+            pl.BlockSpec((b_tile, d_tile),
+                         lambda bi, di, ki, idx_p: (bi, di)),
+        ]
+        operands += [w_self.reshape(b, 1), self_rows]
+    # full feature table stays in HBM; rows are DMA'd manually
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    operands.append(feats)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            # the (b_tile, k_slab) weight block — ONE load per grid step
-            pl.BlockSpec((b_tile, k_slab),
-                         lambda bi, di, ki, idx_p: (bi, ki)),
-            # full feature table stays in HBM; rows are DMA'd manually
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((b_tile, d_tile),
                                lambda bi, di, ki, idx_p: (bi, di)),
         scratch_shapes=[
-            pltpu.VMEM((k_slab, b_tile, d_tile), feats.dtype),
+            pltpu.VMEM((2, k_slab, b_tile, d_tile), feats.dtype),
             pltpu.VMEM((b_tile, d_tile), jnp.float32),
-            pltpu.SemaphoreType.DMA((k_slab, b_tile)),
+            pltpu.SemaphoreType.DMA((2, k_slab, b_tile)),
         ],
     )
     fn = pl.pallas_call(
-        _make_tiled_kernel(b_tile, d_tile, k_slab, k),
+        _make_tiled_kernel(b_tile, d_tile, k_slab, k, fuse_self),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), feats.dtype),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )
-    return fn(idx.reshape(-1), w, feats)
+    return fn(idx.reshape(-1), *operands)

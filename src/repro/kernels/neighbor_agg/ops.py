@@ -69,6 +69,42 @@ def _agg_bwd(static, res, g):
 _agg.defvjp(_agg_fwd, _agg_bwd)
 
 
+# -- fused self-weight epilogue variant -------------------------------------
+# out[b] = Σ_k w[b,k]·feats[idx[b,k]] + w_self[b]·self_rows[b] in ONE kernel
+# (the epilogue folds into the accumulator init; see neighbor_agg.py)
+
+def _run_kernel_fused(feats, idx, w, self_rows, w_self, static):
+    _, interpret, d_tile, b_tile, k_slab = static
+    return neighbor_agg_pallas_tiled(feats, idx, w, self_rows=self_rows,
+                                     w_self=w_self, b_tile=b_tile,
+                                     d_tile=d_tile, k_slab=k_slab,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _agg_self(feats, idx, w, self_rows, w_self, static):
+    return _run_kernel_fused(feats, idx, w, self_rows, w_self, static)
+
+
+def _agg_self_fwd(feats, idx, w, self_rows, w_self, static):
+    return (_run_kernel_fused(feats, idx, w, self_rows, w_self, static),
+            (feats, idx, w, self_rows, w_self))
+
+
+def _agg_self_bwd(static, res, g):
+    feats, idx, w, self_rows, w_self = res
+    dfeats, didx, dw = _agg_bwd(static, (feats, idx, w), g)
+    g32 = g.astype(jnp.float32)
+    dself = (w_self.astype(jnp.float32)[:, None] * g32
+             ).astype(self_rows.dtype)
+    dwself = jnp.einsum("bd,bd->b", g32, self_rows.astype(jnp.float32)
+                        ).astype(w_self.dtype)
+    return dfeats, didx, dw, dself, dwself
+
+
+_agg_self.defvjp(_agg_self_fwd, _agg_self_bwd)
+
+
 def _pad_to(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if not pad:
@@ -81,26 +117,41 @@ def _pad_to(x, axis, mult):
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
                                              "kernel", "d_tile", "b_tile",
                                              "k_slab"))
-def neighbor_agg(feats, idx, w, *, use_kernel: bool = False,
+def neighbor_agg(feats, idx, w, self_rows=None, w_self=None, *,
+                 use_kernel: bool = False,
                  interpret: bool = True, kernel: str = "tiled",
                  d_tile: int = 128, b_tile: int = 8, k_slab: int = 4):
-    """out[b] = Σ_k w[b,k] · feats[idx[b,k]].
+    """out[b] = Σ_k w[b,k] · feats[idx[b,k]]  [+ w_self[b] · self_rows[b]].
 
-    feats [N, D]; idx [B, K] int32; w [B, K] (0 ⇒ padding edge).
-    kernel: "tiled" (batch-tiled, production) | "row" (seed reference).
-    Differentiable wrt feats and w in both dispatch modes.
+    feats [N, D]; idx [B, K] int32; w [B, K] (0 ⇒ padding edge);
+    optional self_rows [B, D] + w_self [B] fuse the callers' self-loop
+    epilogue into the tiled kernel's accumulator init (on the "row" /
+    jnp dispatch paths the epilogue is applied outside the kernel).
+    kernel: "tiled" (batch-tiled, double-buffered, production) | "row"
+    (seed reference).  Differentiable wrt feats, w, self_rows and
+    w_self in all dispatch modes.
     """
     assert kernel in ("row", "tiled"), kernel
+    fused = self_rows is not None
+    assert fused == (w_self is not None), \
+        "self_rows and w_self must be passed together"
     if not use_kernel:
-        return neighbor_agg_ref(feats, idx, w)
+        out = neighbor_agg_ref(feats, idx, w)
+        return out + w_self[:, None] * self_rows if fused else out
     b, k = idx.shape
     d = feats.shape[1]
     feats_p = _pad_to(feats, 1, d_tile)
-    if kernel == "tiled":
-        idx_p = _pad_to(_pad_to(idx, 0, b_tile), 1, k_slab)
-        w_p = _pad_to(_pad_to(w, 0, b_tile), 1, k_slab)
-    else:
-        idx_p, w_p = idx, w
     static = (kernel, interpret, d_tile, b_tile, k_slab)
-    out = _agg(feats_p, idx_p, w_p, static)
+    if kernel == "row":
+        out = _agg(feats_p, idx, w, static)[:b, :d]
+        return out + w_self[:, None] * self_rows if fused else out
+    idx_p = _pad_to(_pad_to(idx, 0, b_tile), 1, k_slab)
+    w_p = _pad_to(_pad_to(w, 0, b_tile), 1, k_slab)
+    if fused:
+        # padded rows carry w_self = 0, so the fused epilogue stays exact
+        self_p = _pad_to(_pad_to(self_rows, 0, b_tile), 1, d_tile)
+        wself_p = _pad_to(w_self, 0, b_tile)
+        out = _agg_self(feats_p, idx_p, w_p, self_p, wself_p, static)
+    else:
+        out = _agg(feats_p, idx_p, w_p, static)
     return out[:b, :d]

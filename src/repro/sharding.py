@@ -10,6 +10,7 @@ from __future__ import annotations
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 BATCH = "batch"    # data-parallel axis (pod x data)
@@ -111,6 +112,17 @@ def active_mesh() -> Optional[Mesh]:
 
 def batch_mesh_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def node_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """One-axis ("data",) mesh over the local devices — the NODES
+    logical axis resolves onto it, so a NODES-sharded array lays its
+    rows out data-parallel over every local device (GNN full-graph
+    training; see engine.ShardedFullGraphSource)."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ("data",))
 
 
 def constrain(x, logical: Sequence[Optional[str]]):
