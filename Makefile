@@ -20,4 +20,8 @@ sweep-smoke:
 	PYTHONPATH=src:. python -c "from repro.core.experiment import main; \
 	main(['--preset', 'arxiv-like', '--n', '300', '--iters', '3', \
 	'--bs', '16', '32', '--fanout', '3', '--layers', '1', \
-	'--out', 'ci_sweep_smoke'])"
+	'--out', 'ci_sweep_smoke']); \
+	main(['--preset', 'arxiv-like', '--n', '300', '--iters', '3', \
+	'--bs', '32', '--fanout', '3', '--layers', '1', \
+	'--sources', 'cluster', 'importance', 'minibatch_sharded', \
+	'--out', 'ci_sweep_smoke_sources'])"

@@ -103,6 +103,14 @@ def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
         # gate skips it)
         rows.append(run_variant(graph, kcfg, paradigm, kernel_iters,
                                 True, seed=seed))
+    # scenario sources (one fast-path cell each): cluster unions,
+    # importance-weighted targets, NODES-sharded mini-batches.  The gate
+    # only compares variants PRESENT in the baseline, so these rows are
+    # informational until the baseline is refreshed — best-of-3 like the
+    # other gated cells so that refresh does not bake in one noisy run.
+    for paradigm in ("cluster", "importance", "minibatch_sharded"):
+        rows.append(run_variant(graph, cfg, paradigm, iters, True,
+                                seed=seed, repeats=3))
     if len(jax.devices()) > 1:
         rows.append(run_variant(graph, cfg, "fullgraph_sharded", iters,
                                 True, seed=seed, repeats=3))
@@ -148,7 +156,15 @@ def check_regression(rows: List[Dict], baseline_path: str = BENCH_PATH,
             # noisy to gate on
             continue
         b = base.get(r["variant"])
-        if b is None or not b["steady_steps_per_s"]:
+        if b is None:
+            # a variant the baseline predates (e.g. a source added in
+            # this PR): record-only until the baseline is refreshed —
+            # the first PR after a new source must not trip the gate
+            print(f"  {r['variant']:32s} steps/s "
+                  f"{r['steady_steps_per_s']:>10.2f} (new variant, not "
+                  f"in baseline — not gated)")
+            continue
+        if not b["steady_steps_per_s"]:
             continue
         old, new = b["steady_steps_per_s"], r["steady_steps_per_s"]
         rel = (new - old) / old

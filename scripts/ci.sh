@@ -25,5 +25,6 @@ python benchmarks/bench_sampler.py --quick
 echo "== engine throughput bench (smoke + regression gate) =="
 python benchmarks/bench_engine.py --smoke --check
 
-echo "== experiment sweep smoke (2 grid points, few iters) =="
+echo "== experiment sweep smoke (2 minibatch grid points + one point =="
+echo "== per scenario source: cluster / importance / minibatch_sharded =="
 make sweep-smoke

@@ -170,6 +170,10 @@ class GNNConfig:
             f"fan-outs must be positive, got {self.fanout}")
         req(self.batch_size > 0,
             f"batch_size must be > 0, got {self.batch_size}")
+        req(self.n_nodes <= 0 or self.batch_size <= self.n_nodes,
+            f"batch_size must not exceed the graph "
+            f"(b={self.batch_size} > n_nodes={self.n_nodes}); the engine "
+            f"pads b > n_train, but b > n can only be a grid typo")
         req(self.max_degree > 0,
             f"max_degree must be > 0, got {self.max_degree}")
         if self.model == "gat":

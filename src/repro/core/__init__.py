@@ -6,6 +6,8 @@ from repro.core.gnn import init_gnn, full_graph_forward, minibatch_forward, gnn_
 from repro.core.trainer import train_full_graph, train_minibatch, TrainResult  # noqa: F401
 from repro.core.engine import (  # noqa: F401
     Trainer, TrainPlan, BatchSource, FullGraphSource, SampledSource,
+    ClusterSource, ImportanceSampledSource, ShardedSampledSource,
+    ShardedFullGraphSource,
     Callback, HistoryCallback, EarlyStop, CheckpointCallback)
 from repro.core.experiment import run_experiment, sweep, save_rows  # noqa: F401
 from repro.core import theory, metrics, wasserstein  # noqa: F401

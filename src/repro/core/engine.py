@@ -10,7 +10,11 @@ Pieces
   ``ShardedFullGraphSource`` (the same, rows laid out over the NODES
   axis of a local device mesh) and ``SampledSource`` (vectorized CSR
   sampler, optional Prefetcher with reusable host staging buffers) are
-  the paper's two paradigms.
+  the paper's two paradigms; ``ClusterSource`` (Cluster-GCN unions of
+  BFS partitions, ``core.partition``), ``ImportanceSampledSource``
+  (score-weighted targets + unbiasedness-preserving loss reweighting)
+  and ``ShardedSampledSource`` (the mini-batch twin of the sharded
+  full-graph source) extend the space to the related-work scenarios.
 - ``TrainPlan``       — declarative run spec: optimizer name/lr/schedule
   (resolved from ``repro.optim``), iteration budget, eval cadence,
   full-loss tracking, stop targets, checkpoint cadence, and the
@@ -66,12 +70,25 @@ from repro.core import gnn as G
 from repro.core.graph import Graph, to_ell
 from repro.core.metrics import History
 from repro.core.prefetch import HostStagingRing, Prefetcher
-from repro.core.sampler import FanoutBatch, gather_features, sample_batch
+from repro.core.sampler import (FanoutBatch, expand_batch, gather_features,
+                                sample_batch)
 
 
 # ---------------------------------------------------------------------------
 # Shared device-side helpers (memoized per graph)
 # ---------------------------------------------------------------------------
+
+def _resolve_max_deg(graph: Graph, max_deg: Optional[int]) -> int:
+    """ELL width for an optional cap.  ``max_deg or graph.d_max`` is the
+    trap this replaces: an explicit ``max_deg=0`` is falsy, so it used
+    to silently fall back to the UNCAPPED d_max instead of erroring."""
+    if max_deg is None:
+        return graph.d_max
+    if max_deg < 1:
+        raise ValueError(f"max_deg must be >= 1 (or None for "
+                         f"d_max={graph.d_max}), got {max_deg}")
+    return int(max_deg)
+
 
 def _device_ell(graph: Graph, max_deg: Optional[int] = None):
     """Device-resident ELL layout, memoized per graph: evaluation and the
@@ -84,7 +101,7 @@ def _device_ell(graph: Graph, max_deg: Optional[int] = None):
     [n, K] upload per grid point (sources that need a capped ELL to
     outlive the cache hold their own reference via ``self.ell``).
     """
-    key = int(max_deg or graph.d_max)
+    key = _resolve_max_deg(graph, max_deg)
     cache = getattr(graph, "_ell_cache", None)
     if cache is None:
         cache = {}
@@ -331,6 +348,14 @@ class BatchSource:
         this source's forward expects (sharded sources replicate)."""
         return _device_nodes(self.graph, which)
 
+    def place(self, tree):
+        """Device placement for the params/opt_state pytrees before the
+        first step.  Sharded sources replicate over their mesh so the
+        step's input shardings are already final at iteration 0 —
+        otherwise the first step's committed outputs silently force a
+        SECOND compile at iteration 1."""
+        return tree
+
     def batches(self):
         raise NotImplementedError
 
@@ -409,6 +434,7 @@ class ShardedFullGraphSource(FullGraphSource):
         from repro import sharding as sh
         self.graph, self.cfg = graph, cfg
         mesh = self.mesh if self.mesh is not None else sh.node_mesh()
+        self._mesh = mesh
         n_dev = int(np.prod(list(mesh.shape.values())))
         if cfg.use_agg_kernel and n_dev > 1:
             raise ValueError(
@@ -420,7 +446,7 @@ class ShardedFullGraphSource(FullGraphSource):
         # and therefore ONE compiled step (the step cache keys on the
         # consts' identity)
         key = (tuple(d.id for d in mesh.devices.flat),
-               int(self.max_deg or graph.d_max))
+               _resolve_max_deg(graph, self.max_deg))
         cache = getattr(graph, "_sharded_ell_cache", None)
         if cache is None:
             cache = {}
@@ -455,6 +481,11 @@ class ShardedFullGraphSource(FullGraphSource):
             self._splits[which] = jax.device_put(
                 getattr(self.graph, f"{which}_nodes"), self._repl)
         return self._splits[which]
+
+    def place(self, tree):
+        from repro import sharding as sh
+        repl = sh.named((), self._mesh)          # P(): any-rank replicate
+        return jax.tree.map(lambda a: jax.device_put(a, repl), tree)
 
 
 class SampledSource(BatchSource):
@@ -497,12 +528,23 @@ class SampledSource(BatchSource):
 
     def bind(self, graph, cfg, plan):
         self.graph, self.cfg = graph, cfg
-        self.b = self.batch_size or cfg.batch_size
+        n_train = len(graph.train_nodes)
+        if n_train == 0:
+            raise ValueError(
+                f"{type(self).__name__}: graph has no training nodes "
+                f"(train_mask selects 0 of {graph.n}) — nothing to sample")
+        # b_request is what the sampler draws; b is the fixed compiled
+        # width every batch pads up to (subclasses may round b up, e.g.
+        # to a mesh-size multiple, without over-sampling targets)
+        self.b_request = self.b = self.batch_size or cfg.batch_size
+        if self.b < 1:
+            raise ValueError(f"{type(self).__name__}: batch_size must be "
+                             f">= 1, got {self.b}")
         self.fanouts = self.fanouts or tuple(cfg.fanout)
         assert len(self.fanouts) == cfg.n_layers
         self.n_iters = plan.n_iters
         self.seed = plan.seed
-        self.pad = max(0, self.b - len(graph.train_nodes))
+        self.pad = max(0, self.b - n_train)
         self._inflight = []
         if self.reuse_buffers:
             # slots outnumber in-flight batches: queue depth + the batch
@@ -544,7 +586,24 @@ class SampledSource(BatchSource):
             masks=[padrow(m) for m in fb.masks],
             weights=[padrow(w) for w in fb.weights],
             self_w=[padrow(s) for s in fb.self_w],
-            labels=padrow(fb.labels))
+            labels=padrow(fb.labels),
+            target_w=(padrow(fb.target_w)
+                      if fb.target_w is not None else None))
+
+    # -- subclass hooks ------------------------------------------------
+    def _sample(self, rng, graph, batch_size, fanouts) -> FanoutBatch:
+        """How one batch is drawn (Prefetcher-compatible signature).
+        Subclasses override for non-uniform target selection."""
+        return sample_batch(rng, graph, batch_size, fanouts)
+
+    def _extra_cols(self, fb: FanoutBatch, valid_n: int) -> Tuple:
+        """Columns appended after ``labels`` in the host batch tuple
+        (``_loss_impl`` must unpack in the same order)."""
+        if not self.pad:
+            return ()
+        valid = np.zeros(self.b, np.float32)
+        valid[:valid_n] = 1.0
+        return (valid,)
 
     def _host_batch(self, graph, fb):
         """Host tuple for one batch.  Returns ``(slot, host_tree)`` —
@@ -552,11 +611,7 @@ class SampledSource(BatchSource):
         worker thread when prefetching."""
         valid_n = fb.batch_size
         fb = self._pad_batch(fb)
-        extra: Tuple = ()
-        if self.pad:
-            valid = np.zeros(self.b, np.float32)
-            valid[:valid_n] = 1.0
-            extra = (valid,)
+        extra: Tuple = tuple(self._extra_cols(fb, valid_n))
         if self._ring is None:
             feats = gather_features(graph, fb)
             masks = [m.astype(np.float32) for m in fb.masks]
@@ -571,33 +626,40 @@ class SampledSource(BatchSource):
                  + [(fb.labels.shape, fb.labels.dtype)]
                  + [(v.shape, v.dtype) for v in extra])
         slot = self._ring.acquire()
-        bufs = iter(self._ring.buffers(slot, specs))
-        feats = []
-        for ids in fb.nodes:          # gather straight into the buffer
-            buf = next(bufs)
-            np.take(graph.feats, ids.reshape(-1), axis=0,
-                    out=buf.reshape(-1, fd))
-            feats.append(buf)
-        masks = []
-        for m in fb.masks:            # in-place bool -> f32 cast
-            buf = next(bufs)
-            np.copyto(buf, m, casting="unsafe")
-            masks.append(buf)
-        small = []
-        for arrs in (fb.weights, fb.self_w):
-            out = []
-            for a in arrs:
+        try:
+            bufs = iter(self._ring.buffers(slot, specs))
+            feats = []
+            for ids in fb.nodes:      # gather straight into the buffer
                 buf = next(bufs)
-                np.copyto(buf, a)
-                out.append(buf)
-            small.append(out)
-        labels = next(bufs)
-        np.copyto(labels, fb.labels)
-        tail = []
-        for v in extra:
-            buf = next(bufs)
-            np.copyto(buf, v)
-            tail.append(buf)
+                np.take(graph.feats, ids.reshape(-1), axis=0,
+                        out=buf.reshape(-1, fd))
+                feats.append(buf)
+            masks = []
+            for m in fb.masks:        # in-place bool -> f32 cast
+                buf = next(bufs)
+                np.copyto(buf, m, casting="unsafe")
+                masks.append(buf)
+            small = []
+            for arrs in (fb.weights, fb.self_w):
+                out = []
+                for a in arrs:
+                    buf = next(bufs)
+                    np.copyto(buf, a)
+                    out.append(buf)
+                small.append(out)
+            labels = next(bufs)
+            np.copyto(labels, fb.labels)
+            tail = []
+            for v in extra:
+                buf = next(bufs)
+                np.copyto(buf, v)
+                tail.append(buf)
+        except BaseException:
+            # a worker dying mid-batch must not strand its staging slot:
+            # the consuming step never runs, so done() would never
+            # release it and the ring would leak one slot per failure
+            self._ring.release(slot)
+            raise
         return slot, (feats, masks, small[0], small[1], labels) \
             + tuple(tail)
 
@@ -612,10 +674,11 @@ class SampledSource(BatchSource):
 
     def batches(self):
         if self.prefetch:
-            self._pf = Prefetcher(self.graph, self.b, self.fanouts,
+            self._pf = Prefetcher(self.graph, self.b_request, self.fanouts,
                                   seed=self.seed, depth=self.depth,
                                   n_batches=self.n_iters,
-                                  payload_fn=self._host_batch)
+                                  payload_fn=self._host_batch,
+                                  sample_fn=self._sample)
             try:
                 for _ in range(self.n_iters):
                     fb, payload = self._pf.next()
@@ -625,7 +688,8 @@ class SampledSource(BatchSource):
         else:
             rng = np.random.default_rng(self.seed)
             for _ in range(self.n_iters):
-                fb = sample_batch(rng, self.graph, self.b, self.fanouts)
+                fb = self._sample(rng, self.graph, self.b_request,
+                                  self.fanouts)
                 yield self._to_device(self._host_batch(self.graph, fb)), \
                     fb.batch_size
 
@@ -640,6 +704,343 @@ class SampledSource(BatchSource):
             self._ring.close()     # wakes a worker blocked in acquire()
         if self._pf is not None:
             pf, self._pf = self._pf, None
+            pf.close()
+
+
+class ImportanceSampledSource(SampledSource):
+    """Mini-batch SGD with NON-uniform target selection: targets are
+    drawn WITH replacement from the training split with probability
+    p_j ∝ score_j, and every sampled row carries the loss weight
+    w_j = 1 / (n_train · p_j), so the weighted batch mean stays an
+    UNBIASED estimator of the full training objective
+    (E[1/b Σ w_j ℓ_j] = 1/n Σ ℓ_i) no matter how skewed — or how far
+    from summing to one — the scores are.
+
+    ``scores`` selects the proposal ("The Case for Sampling", Serafini
+    & Guan 2021 — sampling design changes both convergence and cost):
+
+    - ``"degree"`` (default): (deg + 1) ** alpha — high-degree nodes,
+      whose fan-out trees are the expensive ones, are visited more
+      often but down-weighted accordingly;
+    - ``"grad"``: per-node gradient norm ‖∂ℓ_i/∂logits_i‖ at the
+      plan-seed init params (one full-graph forward at bind time) — a
+      cheap static proxy for gradient-norm importance sampling;
+    - an array of per-node (length n) or per-train-node (length
+      n_train) non-negative scores — e.g. gradient norms refreshed from
+      a pilot run.  Zero scores are floored to a tiny positive value:
+      a node with p_j = 0 would never be sampled and the estimator
+      would silently drop its loss term.
+
+    Sampling WITH replacement means any ``batch_size`` is valid —
+    b > n_train never pads, it just revisits nodes (weights keep the
+    estimator honest).  Everything else (Prefetcher, HostStagingRing,
+    pad/donate/deferred-sync fast path) is inherited from
+    ``SampledSource``.
+    """
+
+    name = "importance"
+
+    def __init__(self, batch_size: Optional[int] = None,
+                 fanouts: Optional[Sequence[int]] = None,
+                 scores="degree", alpha: float = 1.0, **kw):
+        super().__init__(batch_size, fanouts, **kw)
+        self.scores = scores
+        self.alpha = alpha
+
+    def bind(self, graph, cfg, plan):
+        super().bind(graph, cfg, plan)
+        train = graph.train_nodes
+        if isinstance(self.scores, str):
+            if self.scores == "degree":
+                s = (graph.degrees[train] + 1.0) ** self.alpha
+            elif self.scores == "uniform":
+                s = np.ones(len(train), np.float64)
+            elif self.scores == "grad":
+                s = self._grad_norm_scores(graph, cfg, plan)
+            else:
+                raise ValueError(
+                    f"ImportanceSampledSource: unknown scores mode "
+                    f"{self.scores!r} (have: degree, uniform, grad, or an "
+                    f"array)")
+        else:
+            s = np.asarray(self.scores, np.float64).reshape(-1)
+            if s.shape[0] == graph.n:
+                s = s[train]
+            if s.shape[0] != len(train):
+                raise ValueError(
+                    f"ImportanceSampledSource: scores must have length "
+                    f"n={graph.n} or n_train={len(train)}, got "
+                    f"{s.shape[0]}")
+        if not np.all(np.isfinite(s)) or (s < 0).any() or s.sum() <= 0:
+            raise ValueError(
+                "ImportanceSampledSource: scores must be finite, "
+                "non-negative, with a positive sum")
+        if (s == 0).any():              # p_j = 0 would bias the estimator
+            s = np.where(s > 0, s, s[s > 0].min() * 1e-6)
+        p = s / s.sum()
+        self._p = p
+        self._train = train
+        # E_p[w] = Σ p_j / (n p_j) = 1: uniform scores give weight 1.0
+        self._w = (1.0 / (len(train) * p)).astype(np.float32)
+        # replacement always fills b_request rows, so padding exists
+        # only when a subclass rounds the compiled width up (the valid
+        # column below masks those rows)
+        self.pad = self.b - self.b_request
+        return self
+
+    def _grad_norm_scores(self, graph, cfg, plan):
+        """‖∂ℓ_i/∂logits_i‖ per train node at the plan-seed init params
+        (softmax(z) − onehot for CE, z − onehot for MSE)."""
+        idx, w, w_self, feats, labels = _device_ell(graph)
+        params = G.init_gnn(jax.random.key(plan.seed), cfg,
+                            graph.feats.shape[1])
+        logits = np.asarray(G.full_graph_forward(
+            params, _static_cfg(cfg), feats, idx, w, w_self))
+        tr = graph.train_nodes
+        lt = logits[tr].astype(np.float64)
+        onehot = np.zeros_like(lt)
+        onehot[np.arange(len(tr)), graph.labels[tr]] = 1.0
+        if cfg.loss == "mse":
+            g = lt - onehot
+        else:
+            e = np.exp(lt - lt.max(axis=1, keepdims=True))
+            g = e / e.sum(axis=1, keepdims=True) - onehot
+        return np.linalg.norm(g, axis=1)
+
+    def _sample(self, rng, graph, batch_size, fanouts):
+        # batch_size is b_request per the hook contract — a subclass
+        # that rounds self.b up must not over-sample targets
+        sel = rng.choice(len(self._train), size=batch_size, replace=True,
+                         p=self._p)
+        fb = expand_batch(rng, graph,
+                          self._train[sel].astype(np.int32), fanouts)
+        fb.target_w = self._w[sel]
+        return fb
+
+    def _extra_cols(self, fb, valid_n):
+        valid = np.zeros(self.b, np.float32)
+        valid[:valid_n] = 1.0
+        return (valid, fb.target_w)
+
+    @staticmethod
+    def _loss_impl(params, batch, consts, cfg: GNNConfig):
+        feats, masks, weights, self_w, labels, valid, row_w = batch
+        logits = G.minibatch_forward(params, cfg, feats, masks, weights,
+                                     self_w)
+        return G.gnn_loss(logits, labels, cfg.loss, cfg.n_classes,
+                          valid=valid, weight=row_w)
+
+
+class ShardedSampledSource(SampledSource):
+    """Data-parallel mini-batches: the sampled batch's target axis is
+    laid out over the ``NODES`` axis of a local device mesh — the
+    mini-batch twin of ``ShardedFullGraphSource``.  The host side is
+    inherited unchanged (CSR sampler, Prefetcher, per-shape
+    ``HostStagingRing``); only the upload differs: every leaf of the
+    batch pytree is ``device_put`` with a NODES-sharded leading axis
+    (``sharding.row_sharding``), so XLA GSPMD partitions the fan-out
+    tree forward per device shard and all-reduces the gradients.
+
+    ``b`` is rounded UP to a multiple of the mesh size; the surplus
+    rows ride the engine's existing masked-row padding (the valid
+    column keeps the loss equal to the unpadded mean).  On a 1-device
+    mesh the host batches, the compiled step, and therefore the loss
+    sequence are identical to ``SampledSource`` (test-enforced
+    bit-for-bit).
+    """
+
+    name = "minibatch_sharded"
+
+    def __init__(self, batch_size: Optional[int] = None,
+                 fanouts: Optional[Sequence[int]] = None, mesh=None, **kw):
+        super().__init__(batch_size, fanouts, **kw)
+        self.mesh = mesh
+
+    def bind(self, graph, cfg, plan):
+        from repro import sharding as sh
+        super().bind(graph, cfg, plan)
+        mesh = self.mesh if self.mesh is not None else sh.node_mesh()
+        self._mesh = mesh
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        if cfg.use_agg_kernel and n_dev > 1:
+            raise ValueError(
+                "ShardedSampledSource: use_agg_kernel is single-device "
+                "only (the Pallas gather does not partition over the "
+                "NODES axis yet) — run the einsum path on a mesh")
+        if self.b % n_dev:               # surplus rows are masked out
+            self.b += (-self.b) % n_dev
+        self.pad = max(0, self.b - min(self.b_request,
+                                       len(graph.train_nodes)))
+        self._repl = sh.named((None,), mesh)
+        self._row_shardings: dict = {}
+        self._repl_splits: dict = {}
+        return self
+
+    def _row_sharding(self, ndim: int):
+        from repro import sharding as sh
+        s = self._row_shardings.get(ndim)
+        if s is None:
+            s = sh.row_sharding(self._mesh, ndim)
+            self._row_shardings[ndim] = s
+        return s
+
+    def _to_device(self, payload):
+        slot, host = payload
+        if slot >= 0:
+            self._inflight.append(slot)
+        return jax.device_put(
+            host, jax.tree.map(lambda a: self._row_sharding(a.ndim), host))
+
+    def node_split(self, which: str):
+        # replicated over the mesh so eval mixes cleanly with the
+        # mesh-committed params the sharded step produces
+        if which not in self._repl_splits:
+            self._repl_splits[which] = jax.device_put(
+                getattr(self.graph, f"{which}_nodes"), self._repl)
+        return self._repl_splits[which]
+
+    def place(self, tree):
+        from repro import sharding as sh
+        repl = sh.named((), self._mesh)          # P(): any-rank replicate
+        return jax.tree.map(lambda a: jax.device_put(a, repl), tree)
+
+
+class ClusterSource(BatchSource):
+    """Cluster-GCN style batching: partition once (greedy BFS,
+    ``core.partition`` — no METIS dependency), then every iteration
+    trains on the induced subgraph of a union of k clusters.  Against
+    node-wise (b, β) fan-out sampling this trades neighbor explosion
+    for a bounded, reusable batch structure: each cluster's induced ELL
+    block is built ONCE at bind and batches assemble block-diagonally
+    (cross-cluster edges are dropped — vanilla Cluster-GCN's documented
+    approximation).
+
+    The batch is a fixed-shape padded ELL ([m_max, K] with m_max = the
+    k largest clusters stacked, K = the widest induced block), so every
+    grid point compiles exactly ONE step like the other sources, and
+    donation/deferred-sync apply unchanged.  The loss runs the
+    FULL-GRAPH forward on the batch-local ELL and masks to the batch's
+    training rows (padding and non-train rows carry zero ``valid``).
+    Batches with zero training rows are rejection-resampled (bind
+    fails fast if NO cluster contains a training node).
+    """
+
+    name = "cluster"
+
+    def __init__(self, batch_size: Optional[int] = None,
+                 clusters_per_batch: int = 2,
+                 n_parts: Optional[int] = None, partition_seed: int = 0):
+        if clusters_per_batch < 1:
+            raise ValueError(f"ClusterSource: clusters_per_batch must be "
+                             f">= 1, got {clusters_per_batch}")
+        if n_parts is not None and n_parts < 1:
+            raise ValueError(f"ClusterSource: n_parts must be >= 1, got "
+                             f"{n_parts}")
+        self.batch_size = batch_size
+        self.clusters_per_batch = clusters_per_batch
+        self.n_parts = n_parts
+        self.partition_seed = partition_seed
+        self._pf: Optional[Prefetcher] = None
+
+    def bind(self, graph, cfg, plan):
+        from repro.core.partition import bfs_partition, cluster_ell_blocks
+        self.graph, self.cfg = graph, cfg
+        self.b = self.batch_size or cfg.batch_size
+        k = self.clusters_per_batch
+        if self.n_parts is None:
+            # expected union size ≈ b: n/P nodes per cluster, k per batch
+            n_parts = int(round(graph.n * k / max(self.b, 1)))
+        else:
+            n_parts = self.n_parts
+        n_parts = min(max(n_parts, k), graph.n)
+        part = bfs_partition(graph, n_parts, seed=self.partition_seed)
+        blocks = cluster_ell_blocks(graph, part)
+        self.blocks = blocks
+        self.n_parts_ = len(blocks.clusters)
+        self.k = min(k, self.n_parts_)
+        self._train_valid = [graph.train_mask[c].astype(np.float32)
+                             for c in blocks.clusters]
+        self._has_train = np.array([v.sum() > 0 for v in self._train_valid])
+        if not self._has_train.any():
+            raise ValueError(
+                "ClusterSource: no cluster contains a training node "
+                f"(n_train={len(graph.train_nodes)}) — nothing to train on")
+        sizes = blocks.sizes
+        self.m_max = int(np.sort(sizes)[::-1][:self.k].sum())
+        self.K = blocks.max_width
+        self._feats = [graph.feats[c] for c in blocks.clusters]
+        self._labels = [graph.labels[c].astype(np.int32)
+                        for c in blocks.clusters]
+        self.n_iters = plan.n_iters
+        self.seed = plan.seed
+        return self
+
+    @staticmethod
+    def _loss_impl(params, batch, consts, cfg: GNNConfig):
+        idx, w, w_self, feats, labels, valid = batch
+        logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+        return G.gnn_loss(logits, labels, cfg.loss, cfg.n_classes,
+                          valid=valid)
+
+    def loss(self, params, batch):
+        return type(self)._loss_impl(params, batch, (), self.cfg)
+
+    def _assemble(self, chosen):
+        """Block-diagonal union of the chosen clusters, padded to the
+        fixed (m_max, K) compile shape."""
+        fd = self.graph.feats.shape[1]
+        idx = np.zeros((self.m_max, self.K), np.int32)
+        w = np.zeros((self.m_max, self.K), np.float32)
+        w_self = np.zeros(self.m_max, np.float32)
+        feats = np.zeros((self.m_max, fd), self.graph.feats.dtype)
+        labels = np.zeros(self.m_max, np.int32)
+        valid = np.zeros(self.m_max, np.float32)
+        off = 0
+        for ci in chosen:
+            bi, bw = self.blocks.idx[ci], self.blocks.w[ci]
+            mc, kc = bi.shape
+            # local ids -> batch-local ids; padded entries (weight 0)
+            # offset too, staying in-range for the gather
+            idx[off:off + mc, :kc] = bi + off
+            w[off:off + mc, :kc] = bw
+            w_self[off:off + mc] = self.blocks.w_self[ci]
+            feats[off:off + mc] = self._feats[ci]
+            labels[off:off + mc] = self._labels[ci]
+            valid[off:off + mc] = self._train_valid[ci]
+            off += mc
+        return (idx, w, w_self, feats, labels, valid), int(valid.sum())
+
+    def _sample_union(self, rng, graph, batch_size, fanouts):
+        """One assembled host batch (Prefetcher ``sample_fn`` signature:
+        assembly runs on the worker thread, off the step's critical
+        path, from the single ordered rng stream)."""
+        train_cluster = int(np.nonzero(self._has_train)[0][0])
+        for _ in range(64):          # a batch needs >= 1 training row
+            chosen = rng.choice(self.n_parts_, size=self.k,
+                                replace=False)
+            if self._has_train[chosen].any():
+                break
+        else:                        # pathological split: force one in
+            chosen[0] = train_cluster
+        return self._assemble(chosen)
+
+    def batches(self):
+        self._pf = Prefetcher(self.graph, self.k, (), seed=self.seed,
+                              depth=2, n_batches=self.n_iters,
+                              payload_fn=lambda g, batch: None,
+                              sample_fn=self._sample_union)
+        try:
+            for _ in range(self.n_iters):
+                (host, n_valid), _ = self._pf.next()
+                yield jax.device_put(host), n_valid
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        # idempotent: Trainer's finally and the batches() finally both
+        # land here
+        pf, self._pf = getattr(self, "_pf", None), None
+        if pf is not None:
             pf.close()
 
 
@@ -865,8 +1266,9 @@ class Trainer:
     def run(self) -> TrainResult:
         graph, cfg, plan = self.graph, self.cfg, self.plan
         key = jax.random.key(plan.seed)
-        params = G.init_gnn(key, cfg, graph.feats.shape[1])
-        opt_state = self.opt.init(params)
+        params = self.source.place(G.init_gnn(key, cfg,
+                                              graph.feats.shape[1]))
+        opt_state = self.source.place(self.opt.init(params))
 
         state = TrainState(graph=graph, cfg=cfg, plan=plan,
                            source=self.source, history=History(),

@@ -26,9 +26,11 @@ import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import GNNConfig
-from repro.core.engine import (BatchSource, Callback, FullGraphSource,
+from repro.core.engine import (BatchSource, Callback, ClusterSource,
+                               FullGraphSource, ImportanceSampledSource,
                                SampledSource, ShardedFullGraphSource,
-                               Trainer, TrainPlan, TrainResult)
+                               ShardedSampledSource, Trainer, TrainPlan,
+                               TrainResult)
 from repro.core.graph import Graph
 from repro.core.metrics import (iteration_to_accuracy, iteration_to_loss,
                                 iteration_to_full_loss,
@@ -66,6 +68,12 @@ def metrics_row(res: TrainResult, target_loss: Optional[float] = None,
     return row
 
 
+#: every paradigm name `make_source` dispatches on — the sampler axis of
+#: the (b, β, sampler) cube `sweep(sources=...)` runs
+PARADIGMS = ("fullgraph", "fullgraph_sharded", "minibatch",
+             "minibatch_sharded", "cluster", "importance")
+
+
 def make_source(paradigm: str, b: Optional[int] = None,
                 fanouts: Optional[Sequence[int]] = None) -> BatchSource:
     """The one paradigm-name -> BatchSource mapping (shared by
@@ -76,9 +84,14 @@ def make_source(paradigm: str, b: Optional[int] = None,
         return ShardedFullGraphSource()
     if paradigm == "minibatch":
         return SampledSource(batch_size=b, fanouts=fanouts)
+    if paradigm == "minibatch_sharded":
+        return ShardedSampledSource(batch_size=b, fanouts=fanouts)
+    if paradigm == "cluster":
+        return ClusterSource(batch_size=b)
+    if paradigm == "importance":
+        return ImportanceSampledSource(batch_size=b, fanouts=fanouts)
     raise ValueError(
-        f"paradigm must be 'fullgraph', 'fullgraph_sharded' or "
-        f"'minibatch', got {paradigm!r}")
+        f"paradigm must be one of {PARADIGMS}, got {paradigm!r}")
 
 
 def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
@@ -121,6 +134,11 @@ def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
     if name.startswith("fullgraph"):
         spec = {"paradigm": name, "b": len(graph.train_nodes),
                 "fanouts": f"d_max={graph.d_max}"}
+    elif name == "cluster":
+        # fan-out does not apply: the batch structure is k-of-P clusters
+        spec = {"paradigm": name, "b": getattr(source, "b", b),
+                "fanouts": f"clusters(k={getattr(source, 'k', '?')}"
+                           f"/P={getattr(source, 'n_parts_', '?')})"}
     else:
         spec = {"paradigm": name,
                 "b": getattr(source, "b", b or cfg.batch_size),
@@ -144,9 +162,12 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
           batch_sizes: Sequence[int] = (),
           fanout_grid: Sequence[Sequence[int]] = (),
           include_fullgraph: bool = False,
+          sources: Sequence[str] = ("minibatch",),
           seeds: Sequence[int] = (0,),
           verbose: bool = False) -> List[Dict]:
-    """Run the (b, β) product grid (the shape behind every §5 figure).
+    """Run the (b, β, sampler) product grid — the paper's §5 plane plus
+    a sampler axis over the mini-batch families (``sources`` names from
+    ``PARADIGMS``: minibatch, minibatch_sharded, cluster, importance).
 
     ``fanout_grid`` entries are per-hop fan-out tuples (int entries are
     broadcast to all ``cfg.n_layers`` hops).  Each grid point gets a cfg
@@ -156,10 +177,19 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
     points: List[Tuple[str, Optional[int], Optional[Tuple[int, ...]]]] = []
     if include_fullgraph:
         points.append(("fullgraph", None, None))
-    for b, beta in itertools.product(batch_sizes, fanout_grid):
+    seen = set()
+    for b, beta, src in itertools.product(batch_sizes, fanout_grid,
+                                          sources):
         fo = (tuple(beta) if isinstance(beta, (tuple, list))
               else (int(beta),) * cfg.n_layers)
-        points.append(("minibatch", int(b), fo))
+        if src == "cluster":
+            # fan-out does not apply to cluster batches: crossing the β
+            # axis would just rerun identical, identically-labelled
+            # grid points — keep one per (source, b)
+            if (src, int(b)) in seen:
+                continue
+            seen.add((src, int(b)))
+        points.append((src, int(b), fo))
     rows: List[Dict] = []
     for paradigm, b, fo in points:
         for seed in seeds:
@@ -168,7 +198,9 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                 # namespace checkpoints per grid point/seed so runs don't
                 # overwrite each other's ckpt_{step}.npz files
                 tag = (paradigm if paradigm == "fullgraph"
-                       else f"b{b}_f{'x'.join(map(str, fo))}")
+                       else f"b{b}_f{'x'.join(map(str, fo))}"
+                       if paradigm == "minibatch"
+                       else f"{paradigm}_b{b}_f{'x'.join(map(str, fo))}")
                 plan_pt = dataclasses.replace(
                     plan_pt, ckpt_dir=os.path.join(plan.ckpt_dir,
                                                    f"{tag}_s{seed}"))
@@ -218,6 +250,10 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
     ap.add_argument("--iters", type=int, default=4)
     ap.add_argument("--bs", type=int, nargs="+", default=[32, 64])
     ap.add_argument("--fanout", type=int, nargs="+", default=[3])
+    ap.add_argument("--sources", nargs="+", default=["minibatch"],
+                    help="sampler axis of the grid (see PARADIGMS): "
+                         "minibatch, minibatch_sharded, cluster, "
+                         "importance")
     ap.add_argument("--layers", type=int, default=1)
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--eval-every", type=int, default=2)
@@ -235,7 +271,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
     fo = (tuple(args.fanout) * args.layers if len(args.fanout) == 1
           else tuple(args.fanout))
     rows = sweep(graph, cfg, plan, batch_sizes=args.bs, fanout_grid=[fo],
-                 include_fullgraph=args.fullgraph, verbose=True)
+                 include_fullgraph=args.fullgraph, sources=args.sources,
+                 verbose=True)
     paths = save_rows(args.out, rows)
     print(json.dumps({"rows": len(rows), **paths}))
     return rows

@@ -242,23 +242,34 @@ def minibatch_forward(params, cfg: GNNConfig, hop_feats: Sequence,
 # losses (paper: CE and MSE, §3)
 # ---------------------------------------------------------------------------
 
-def gnn_loss(logits, labels, kind: str, n_classes: int, valid=None):
+def gnn_loss(logits, labels, kind: str, n_classes: int, valid=None,
+             weight=None):
     """CE / MSE over target rows.  ``valid`` (float 0/1 per row, or
     None) masks padded rows out of the mean: padded rows contribute
     exact zeros and the divisor is the valid count, so the result
-    matches the unpadded mean up to float summation order."""
+    matches the unpadded mean up to float summation order.  ``weight``
+    (float per row, or None) scales each row's loss BEFORE the mean and
+    does NOT enter the divisor — importance-sampled batches pass
+    w_j = 1/(n·p_j) so the weighted batch mean stays an unbiased
+    estimator of the full training objective regardless of whether the
+    sampling scores were normalized."""
     if kind == "mse":
         onehot = jax.nn.one_hot(labels, n_classes, dtype=F32)
         rows = jnp.sum(jnp.square(logits.astype(F32) - onehot), axis=-1)
+        if weight is not None:
+            rows = rows * weight
         if valid is None:
             return 0.5 * jnp.mean(rows)
         return 0.5 * (jnp.sum(rows * valid) / jnp.sum(valid))
     logz = jax.scipy.special.logsumexp(logits.astype(F32), axis=-1)
     ll = jnp.take_along_axis(logits.astype(F32), labels[..., None],
                              axis=-1)[..., 0]
+    rows = logz - ll
+    if weight is not None:
+        rows = rows * weight
     if valid is None:
-        return jnp.mean(logz - ll)
-    return jnp.sum((logz - ll) * valid) / jnp.sum(valid)
+        return jnp.mean(rows)
+    return jnp.sum(rows * valid) / jnp.sum(valid)
 
 
 def accuracy(logits, labels):

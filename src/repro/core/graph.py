@@ -103,7 +103,14 @@ def to_ell(graph: Graph, max_deg: Optional[int] = None, rows=None
     per-node loop was the full-graph setup hot spot).
     """
     rows = np.arange(graph.n, dtype=np.int32) if rows is None else rows
-    k = max_deg or graph.d_max
+    # `max_deg or d_max` would silently treat an explicit 0 as "uncapped"
+    if max_deg is None:
+        k = graph.d_max
+    elif max_deg >= 1:
+        k = int(max_deg)
+    else:
+        raise ValueError(f"to_ell: max_deg must be >= 1 (or None for "
+                         f"d_max={graph.d_max}), got {max_deg}")
     m = len(rows)
     deg_all = graph.degrees
     nb, valid = neighbors_batch(graph, rows)          # [m, width]

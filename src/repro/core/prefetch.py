@@ -13,7 +13,10 @@ sample-in-the-loop path with the same seed.
 from __future__ import annotations
 
 import queue
+import sys
 import threading
+import traceback
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -85,9 +88,13 @@ class Prefetcher:
     Yields (FanoutBatch, payload) tuples, where payload is the gathered
     hop features by default; `payload_fn(graph, fb)` overrides the
     per-batch host work so callers can move feature gather + staging
-    onto this background thread (see `engine.SampledSource`).  `depth`
-    is the queue bound (2 = classic double buffering: one batch in
-    flight on the host while the device consumes the other).
+    onto this background thread (see `engine.SampledSource`).
+    `sample_fn(rng, graph, batch_size, fanouts)` overrides how batches
+    are drawn (same signature as `sample_batch`, the default) so
+    scenario sources — cluster unions, importance-weighted targets —
+    keep the one-thread/one-rng ordering guarantee.  `depth` is the
+    queue bound (2 = classic double buffering: one batch in flight on
+    the host while the device consumes the other).
     """
 
     _SENTINEL = object()
@@ -95,12 +102,13 @@ class Prefetcher:
     def __init__(self, graph: Graph, batch_size: int,
                  fanouts: Sequence[int], seed: int = 0, depth: int = 2,
                  n_batches: Optional[int] = None,
-                 payload_fn=None):
+                 payload_fn=None, sample_fn=None):
         self.graph = graph
         self.batch_size = batch_size
         self.fanouts = tuple(fanouts)
         self.n_batches = n_batches
         self.payload_fn = payload_fn or gather_features
+        self.sample_fn = sample_fn or sample_batch
         self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
@@ -115,8 +123,8 @@ class Prefetcher:
             while not self._stop.is_set():
                 if self.n_batches is not None and produced >= self.n_batches:
                     break
-                fb = sample_batch(self._rng, self.graph, self.batch_size,
-                                  self.fanouts)
+                fb = self.sample_fn(self._rng, self.graph,
+                                    self.batch_size, self.fanouts)
                 feats = self.payload_fn(self.graph, fb)
                 # blocking put with timeout so close() can interrupt
                 while not self._stop.is_set():
@@ -153,7 +161,7 @@ class Prefetcher:
             except StopIteration:
                 return
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
         self._stop.set()
         # drain so a blocked put wakes up
         try:
@@ -161,7 +169,19 @@ class Prefetcher:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            # don't return silently leaking a live thread: surface WHERE
+            # the worker is stuck (it is a daemon, so it cannot block
+            # interpreter exit, but a wedged sample_fn/payload_fn would
+            # otherwise go unnoticed until batches stop arriving)
+            frame = sys._current_frames().get(self._thread.ident)
+            where = ("".join(traceback.format_stack(frame))
+                     if frame is not None else "<no stack available>")
+            warnings.warn(
+                f"Prefetcher worker did not exit within {timeout:.1f}s of "
+                f"close(); the thread is stuck in:\n{where}",
+                RuntimeWarning, stacklevel=2)
 
     def __enter__(self):
         return self

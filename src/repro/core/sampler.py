@@ -24,6 +24,9 @@ class FanoutBatch:
     weights: List[np.ndarray]   # hop d >= 1: float32 ã^mini per edge
     self_w: List[np.ndarray]    # hop d >= 0: float32 self-loop weight
     labels: np.ndarray          # [b]
+    #: optional per-target loss weight (importance sampling: 1/(n·p_j),
+    #: preserving E[weighted batch loss] == full training loss)
+    target_w: Optional[np.ndarray] = None
 
     @property
     def batch_size(self) -> int:
@@ -184,11 +187,31 @@ NeighborSampler = Callable[[np.random.Generator, Graph, np.ndarray, int],
 
 def sample_batch(rng: np.random.Generator, graph: Graph, batch_size: int,
                  fanouts: Sequence[int],
-                 neighbor_sampler: Optional[NeighborSampler] = None
-                 ) -> FanoutBatch:
-    """Sample b target nodes then β_d neighbors per hop."""
+                 neighbor_sampler: Optional[NeighborSampler] = None,
+                 strict: bool = False) -> FanoutBatch:
+    """Sample b target nodes then β_d neighbors per hop.
+
+    ``batch_size > n_train`` clamps to n_train by default (the engine
+    pads such partial batches back up to a fixed compiled width); with
+    ``strict=True`` it raises instead.  A graph without training nodes
+    always raises — ``rng.choice`` on the empty split used to surface
+    it as a bare numpy ValueError deep in the call.
+    """
     train = graph.train_nodes
-    b = min(batch_size, len(train))
+    n_train = len(train)
+    if batch_size < 1:
+        raise ValueError(f"sample_batch: batch_size must be >= 1, got "
+                         f"b={batch_size}")
+    if n_train == 0:
+        raise ValueError(
+            f"sample_batch: graph has no training nodes (b={batch_size}, "
+            f"n_train=0) — check graph.train_mask")
+    if strict and batch_size > n_train:
+        raise ValueError(
+            f"sample_batch: batch_size exceeds the training split "
+            f"(b={batch_size} > n_train={n_train}); pass a smaller b or "
+            f"let the engine pad (strict=False clamps to n_train)")
+    b = min(batch_size, n_train)
     targets = rng.choice(train, size=b, replace=False).astype(np.int32)
     return expand_batch(rng, graph, targets, fanouts,
                         neighbor_sampler=neighbor_sampler)

@@ -125,6 +125,13 @@ def node_mesh(n_devices: Optional[int] = None) -> Mesh:
     return Mesh(np.asarray(devs), ("data",))
 
 
+def row_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """NODES-sharded leading axis, replicated on the rest — the layout
+    shared by ShardedFullGraphSource's ELL rows and
+    ShardedSampledSource's per-batch target axis."""
+    return named((NODES,) + (None,) * (ndim - 1), mesh)
+
+
 def constrain(x, logical: Sequence[Optional[str]]):
     """with_sharding_constraint against the activated mesh; no-op when no
     mesh is active (smoke tests) or when dims don't divide (e.g. batch=1

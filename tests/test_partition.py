@@ -1,0 +1,83 @@
+"""METIS-free BFS partitioning + induced-subgraph ELL blocks
+(core/partition.py — the host half of ClusterSource)."""
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.core.partition import (bfs_partition, cluster_ell_blocks,
+                                  partition_clusters)
+
+
+def _path_graph():
+    """0 - 1 - 2 undirected path, everything in the train split."""
+    return Graph(n=3,
+                 indptr=np.array([0, 1, 3, 4], np.int64),
+                 indices=np.array([1, 0, 2, 1], np.int32),
+                 feats=np.ones((3, 2), np.float32),
+                 labels=np.array([0, 1, 0], np.int32),
+                 train_mask=np.ones(3, bool),
+                 val_mask=np.zeros(3, bool),
+                 test_mask=np.zeros(3, bool))
+
+
+def test_bfs_partition_covers_all_nodes_and_balances(small_graph):
+    g = small_graph
+    n_parts = 7
+    part = bfs_partition(g, n_parts, seed=3)
+    assert part.shape == (g.n,)
+    assert part.min() >= 0 and part.max() < n_parts
+    target = -(-g.n // n_parts)
+    sizes = np.bincount(part)
+    assert sizes.sum() == g.n
+    assert sizes.max() <= target           # BFS growing respects budget
+    assert sizes.min() >= 1
+
+
+def test_bfs_partition_deterministic(small_graph):
+    a = bfs_partition(small_graph, 5, seed=9)
+    b = bfs_partition(small_graph, 5, seed=9)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_bfs_partition_singletons_and_bounds(small_graph):
+    g = small_graph
+    part = bfs_partition(g, g.n + 50, seed=0)    # n_parts clamps to n
+    assert np.bincount(part).max() == 1          # every part is one node
+    with pytest.raises(ValueError, match="n_parts"):
+        bfs_partition(g, 0)
+
+
+def test_partition_clusters_sorted_nonempty(small_graph):
+    part = bfs_partition(small_graph, 6, seed=1)
+    clusters = partition_clusters(part)
+    assert sum(len(c) for c in clusters) == small_graph.n
+    for c in clusters:
+        assert len(c) >= 1
+        assert np.all(np.diff(c) > 0)            # sorted, unique
+
+
+def test_cluster_ell_blocks_induced_weights():
+    g = _path_graph()
+    part = np.array([0, 0, 1], np.int32)         # {0, 1} and {2}
+    blocks = cluster_ell_blocks(g, part)
+    assert len(blocks.clusters) == 2
+    # cluster {0, 1}: one induced edge, induced degree 1 on both ends
+    idx0, w0, ws0 = blocks.idx[0], blocks.w[0], blocks.w_self[0]
+    np.testing.assert_array_equal(idx0, [[1], [0]])      # local ids
+    np.testing.assert_allclose(w0, 0.5)                  # 1/sqrt(2*2)
+    np.testing.assert_allclose(ws0, 0.5)                 # 1/(1+1)
+    # singleton cluster {2}: the 0 - 2 edge is cross-cluster -> dropped
+    assert blocks.idx[1].shape == (1, 1)
+    np.testing.assert_allclose(blocks.w[1], 0.0)
+    np.testing.assert_allclose(blocks.w_self[1], 1.0)    # 1/(0+1)
+
+
+def test_cluster_ell_blocks_local_ids_in_range(small_graph):
+    part = bfs_partition(small_graph, 8, seed=2)
+    blocks = cluster_ell_blocks(small_graph, part)
+    for c, idx, w in zip(blocks.clusters, blocks.idx, blocks.w):
+        assert idx.min() >= 0 and idx.max() < len(c)
+        assert (w >= 0).all()
+        # rows with any weight reference only in-cluster neighbors:
+        # weights on padding columns are exactly zero
+        assert w.shape == idx.shape
