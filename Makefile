@@ -11,10 +11,11 @@ bench-quick:
 	PYTHONPATH=src:. python benchmarks/bench_sampler.py --quick
 
 bench-engine:
-	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --check
+	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --check \
+	--devices 4
 
 bench-engine-baseline:
-	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke
+	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --devices 4
 
 sweep-smoke:
 	PYTHONPATH=src:. python -c "from repro.core.experiment import main; \
@@ -24,4 +25,8 @@ sweep-smoke:
 	main(['--preset', 'arxiv-like', '--n', '300', '--iters', '3', \
 	'--bs', '32', '--fanout', '3', '--layers', '1', \
 	'--sources', 'cluster', 'importance', 'minibatch_sharded', \
-	'--out', 'ci_sweep_smoke_sources'])"
+	'--out', 'ci_sweep_smoke_sources']); \
+	main(['--preset', 'arxiv-like', '--n', '300', '--iters', '3', \
+	'--bs', '32', '--fanout', '3', '--layers', '1', '--kernel', \
+	'--sources', 'minibatch_sharded', \
+	'--out', 'ci_sweep_smoke_sharded_kernel'])"

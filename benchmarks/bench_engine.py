@@ -1,9 +1,15 @@
 """Engine throughput bench: steady-state steps/s and time-to-first-step
 for BOTH training paradigms, toggling the device-resident fast path —
 Pallas aggregation kernel on/off, params/opt_state donation + deferred
-loss sync on/off, and (when more than one local device is visible, e.g.
-``XLA_FLAGS=--xla_force_host_platform_device_count=4``) the
-NODES-sharded full-graph source.
+loss sync on/off, the scenario sources, and (``--devices N``) the
+NODES-sharded sources on a multi-device mesh.
+
+``--devices N`` reruns the SHARDED variant set (fullgraph_sharded /
+minibatch_sharded, einsum + shard_map'd kernel cells) in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the flag
+must be set before jax initializes, so the parent process cannot host
+them.  Multi-device rows are keyed by a ``@Ndev`` variant suffix, so
+they land BESIDE the 1-device baseline rows instead of on top of them.
 
 Writes ``BENCH_engine.json`` at the REPO ROOT so every subsequent PR has
 a perf trajectory to regress against.  ``--check`` (CI mode) compares
@@ -16,8 +22,8 @@ Interpret-mode kernel cells are recorded but excluded from the gate
 (their few-iteration CPU wall-clock is noise); a baseline recorded at a
 different size class (smoke vs full) is skipped as incomparable.
 
-    python benchmarks/bench_engine.py --smoke --check     # CI gate
-    python benchmarks/bench_engine.py --smoke             # refresh baseline
+    python benchmarks/bench_engine.py --smoke --check --devices 4  # CI gate
+    python benchmarks/bench_engine.py --smoke --devices 4  # refresh baseline
 """
 from __future__ import annotations
 
@@ -25,7 +31,9 @@ import argparse
 import dataclasses
 import json
 import os
+import subprocess
 import sys
+import tempfile
 from typing import Dict, List, Optional
 
 import jax
@@ -67,10 +75,15 @@ def run_variant(graph, cfg, paradigm: str, iters: int, fast: bool,
         steady = max(steady,
                      (len(times) - 1) / (times[-1] - times[0])
                      if len(times) > 1 and times[-1] > times[0] else 0.0)
+    n_dev = len(jax.devices())
     return {
+        # multi-device runs key their variants by device count, so a
+        # 4-device row diffs against the 4-device baseline row — never
+        # against (or over) the 1-device one
         "variant": f"{paradigm}"
                    f"{'+kernel' if cfg.use_agg_kernel else ''}"
-                   f"{'+fast' if fast else ''}",
+                   f"{'+fast' if fast else ''}"
+                   f"{f'@{n_dev}dev' if n_dev > 1 else ''}",
         "paradigm": paradigm,
         "kernel": int(cfg.use_agg_kernel),
         "fast_path": int(fast),          # donation + deferred loss sync
@@ -82,7 +95,9 @@ def run_variant(graph, cfg, paradigm: str, iters: int, fast: bool,
     }
 
 
-def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
+def _bench_setup(smoke: bool, seed: int):
+    """Shared sizes/graph/configs for the main and sharded variant sets
+    (identical sizes keep 1-device and @Ndev rows comparable)."""
     # gated cells need a measurement window big enough to ride out
     # scheduler jitter on throttled CI hosts (~0.5 s per run, x3 runs)
     n, iters, kernel_iters = (400, 96, 6) if smoke else (2000, 200, 12)
@@ -92,6 +107,11 @@ def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
     kcfg = dataclasses.replace(cfg, model="gcn", use_agg_kernel=True,
                                agg_interpret=True, agg_b_tile=8,
                                agg_d_tile=128, agg_k_slab=4)
+    return graph, cfg, kcfg, iters, kernel_iters
+
+
+def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
+    graph, cfg, kcfg, iters, kernel_iters = _bench_setup(smoke, seed)
     rows = []
     for paradigm in ("fullgraph", "minibatch"):
         for fast in (False, True):
@@ -104,10 +124,7 @@ def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
         rows.append(run_variant(graph, kcfg, paradigm, kernel_iters,
                                 True, seed=seed))
     # scenario sources (one fast-path cell each): cluster unions,
-    # importance-weighted targets, NODES-sharded mini-batches.  The gate
-    # only compares variants PRESENT in the baseline, so these rows are
-    # informational until the baseline is refreshed — best-of-3 like the
-    # other gated cells so that refresh does not bake in one noisy run.
+    # importance-weighted targets, NODES-sharded mini-batches.
     for paradigm in ("cluster", "importance", "minibatch_sharded"):
         rows.append(run_variant(graph, cfg, paradigm, iters, True,
                                 seed=seed, repeats=3))
@@ -115,6 +132,39 @@ def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
         rows.append(run_variant(graph, cfg, "fullgraph_sharded", iters,
                                 True, seed=seed, repeats=3))
     return rows
+
+
+def run_sharded(smoke: bool = True, seed: int = 0) -> List[Dict]:
+    """The NODES-sharded variant set — einsum fast-path cells (gated)
+    plus shard_map'd Pallas kernel cells (interpret mode, record-only)
+    for both sharded sources.  Meant to run under
+    ``--xla_force_host_platform_device_count=N`` via ``--devices``."""
+    graph, cfg, kcfg, iters, kernel_iters = _bench_setup(smoke, seed)
+    rows = []
+    for paradigm in ("fullgraph_sharded", "minibatch_sharded"):
+        rows.append(run_variant(graph, cfg, paradigm, iters, True,
+                                seed=seed, repeats=3))
+        rows.append(run_variant(graph, kcfg, paradigm, kernel_iters,
+                                True, seed=seed))
+    return rows
+
+
+def _sharded_subprocess(n_dev: int, smoke: bool) -> List[Dict]:
+    """Run ``run_sharded`` under N virtual CPU devices (the XLA flag
+    must be set before jax initializes, hence the subprocess)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_dev}"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO_ROOT, "src"), REPO_ROOT]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as tf:
+        cmd = [sys.executable, os.path.abspath(__file__), "--sharded-only",
+               "--rows-out", tf.name] + (["--smoke"] if smoke else [])
+        subprocess.run(cmd, env=env, check=True, timeout=3600)
+        return json.load(open(tf.name))
 
 
 # ---------------------------------------------------------------------------
@@ -188,12 +238,37 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="fail on >BENCH_TOL steps/s regression vs the "
                          "committed BENCH_engine.json")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="additionally run the sharded variant set in a "
+                         "subprocess with N virtual CPU devices "
+                         "(rows keyed @Ndev beside the 1-device ones)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help=argparse.SUPPRESS)    # the --devices subprocess
+    ap.add_argument("--rows-out", default="", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=BENCH_PATH,
                     help="output path (default: repo-root "
                          "BENCH_engine.json)")
     args = ap.parse_args(argv)
 
+    if args.sharded_only:
+        rows = run_sharded(smoke=args.smoke)
+        print_rows("engine-sharded", rows)
+        if args.rows_out:
+            with open(args.rows_out, "w") as f:
+                json.dump(rows, f, indent=1)
+        return 0
+
     rows = run(smoke=args.smoke)
+    if args.devices > 1 and len(jax.devices()) == 1:
+        # only from a 1-device parent: a multi-device parent already
+        # recorded in-process sharded rows under the same @Ndev keys,
+        # and a forced-CPU subprocess duplicate would silently win the
+        # per-variant dict in the gate/baseline
+        rows += _sharded_subprocess(args.devices, args.smoke)
+    elif args.devices:
+        print(f"bench_engine: --devices {args.devices} skipped "
+              f"(parent already sees {len(jax.devices())} device(s); "
+              "sharded rows come from the in-process run)")
     print_rows("engine", rows)
     payload = {"bench": "engine", "smoke": bool(args.smoke),
                "devices": len(jax.devices()), "rows": rows}

@@ -22,9 +22,11 @@ python benchmarks/bench_sampler.py --quick
 # slower or loaded host, widen the tolerance, e.g. BENCH_TOL=0.6, and
 # refresh the baseline from the canonical machine via
 # `make bench-engine-baseline`
-echo "== engine throughput bench (smoke + regression gate) =="
-python benchmarks/bench_engine.py --smoke --check
+echo "== engine throughput bench (smoke + regression gate, incl. the =="
+echo "== 4-virtual-device sharded rows, keyed @4dev in the baseline) =="
+python benchmarks/bench_engine.py --smoke --check --devices 4
 
 echo "== experiment sweep smoke (2 minibatch grid points + one point =="
-echo "== per scenario source: cluster / importance / minibatch_sharded =="
+echo "== per scenario source: cluster / importance / minibatch_sharded, =="
+echo "== plus one sharded x Pallas-kernel point, interpret mode) =="
 make sweep-smoke

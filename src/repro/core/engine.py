@@ -138,10 +138,11 @@ def _static_cfg(cfg: GNNConfig) -> GNNConfig:
         fanout=(1,) * cfg.n_layers, max_degree=1, n_nodes=0, feat_dim=0)
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
+@functools.partial(jax.jit, static_argnums=(1, 8))
 def _eval_acc(params, cfg: GNNConfig, idx, w, w_self, feats, labels,
-              nodes):
-    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self)
+              nodes, mesh=None):
+    logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self,
+                                  mesh=mesh)
     return G.accuracy(logits[nodes], labels[nodes])
 
 
@@ -174,13 +175,15 @@ def _graph_fn_cache(graph: Graph, key, build):
     return hit[0]
 
 
-def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel):
+def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel, mesh=None):
     """Full-training-objective loss (params -> device scalar), closure
     over the device ELL (closing over, instead of passing as arguments,
     keeps the pre-cache jaxpr and therefore the golden full-loss values
-    bit-for-bit)."""
+    bit-for-bit).  ``mesh`` (sharded sources with the kernel on)
+    partitions the kernel's aggregation over the NODES axis."""
     scfg = _static_cfg(cfg)
-    key = ("full_loss", scfg, tuple(id(c) for c in ell) + (id(sel),))
+    key = ("full_loss", scfg, mesh,
+           tuple(id(c) for c in ell) + (id(sel),))
 
     def build():
         idx, w, w_self, feats, labels = ell
@@ -188,7 +191,7 @@ def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel):
         @jax.jit
         def full_loss(params):
             logits = G.full_graph_forward(params, scfg, feats, idx, w,
-                                          w_self)
+                                          w_self, mesh=mesh)
             return G.gnn_loss(logits[sel], labels[sel], scfg.loss,
                               scfg.n_classes)
 
@@ -197,15 +200,15 @@ def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel):
     return _graph_fn_cache(graph, key, build)
 
 
-def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes
-                  ) -> float:
+def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes,
+                  mesh=None) -> float:
     """Inference uses ALL neighbors across the entire graph (§4.1).
     Jitted once per (normalized config, shapes) at module level — NOT
     per Trainer — so sweeps stop paying eval retrace at every grid
     point."""
     idx, w, w_self, feats, labels = ell
     return float(_eval_acc(params, _static_cfg(cfg), idx, w, w_self,
-                           feats, labels, jnp.asarray(nodes)))
+                           feats, labels, jnp.asarray(nodes), mesh))
 
 
 # ---------------------------------------------------------------------------
@@ -421,7 +424,11 @@ class ShardedFullGraphSource(FullGraphSource):
     On a 1-device mesh this produces the exact same loss sequence as
     ``FullGraphSource`` (test-enforced); on an N-device mesh XLA GSPMD
     partitions the forward (the [n, K] gathers all-gather the layer
-    activations) and all-reduces the gradients.
+    activations) and all-reduces the gradients.  With
+    ``cfg.use_agg_kernel`` the Pallas aggregation runs shard-locally
+    over the same mesh (shard_map; ``kernels/README.md`` "Sharding") —
+    bit-equal to the unsharded kernel on 1 device, einsum-equivalent on
+    N.
     """
 
     name = "fullgraph_sharded"
@@ -436,11 +443,6 @@ class ShardedFullGraphSource(FullGraphSource):
         mesh = self.mesh if self.mesh is not None else sh.node_mesh()
         self._mesh = mesh
         n_dev = int(np.prod(list(mesh.shape.values())))
-        if cfg.use_agg_kernel and n_dev > 1:
-            raise ValueError(
-                "ShardedFullGraphSource: use_agg_kernel is single-device "
-                "only (the Pallas gather does not partition over the "
-                "NODES axis yet) — run the einsum path on a mesh")
         # memoized per graph like _device_ell (same one-resident-key
         # eviction): a sweep over sharded grid points reuses ONE upload
         # and therefore ONE compiled step (the step cache keys on the
@@ -475,6 +477,22 @@ class ShardedFullGraphSource(FullGraphSource):
         self.train_nodes = self.node_split("train")
         self.n_nodes = len(graph.train_nodes)
         return self
+
+    @staticmethod
+    def _loss_impl(params, batch, consts, cfg: GNNConfig):
+        idx, w, w_self, feats, labels, train_nodes, mesh = consts
+        logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self,
+                                      mesh=mesh)
+        lt = logits[train_nodes]
+        return G.gnn_loss(lt, labels[train_nodes], cfg.loss,
+                          cfg.n_classes)
+
+    def loss_consts(self):
+        # the mesh rides along as a (static, closed-over) const so the
+        # forward can shard_map the kernel path over the NODES axis;
+        # sh.node_mesh() is memoized, keeping the step-cache key (which
+        # hashes the consts' identity) stable across binds
+        return tuple(self.ell) + (self.train_nodes, self._mesh)
 
     def node_split(self, which: str):
         if which not in self._splits:
@@ -568,7 +586,8 @@ class SampledSource(BatchSource):
                           valid=valid)
 
     def loss(self, params, batch):
-        return type(self)._loss_impl(params, batch, (), self.cfg)
+        return type(self)._loss_impl(params, batch, self.loss_consts(),
+                                     self.cfg)
 
     # -- host-side batch assembly --------------------------------------
     def _pad_batch(self, fb: FanoutBatch) -> FanoutBatch:
@@ -846,7 +865,10 @@ class ShardedSampledSource(SampledSource):
     column keeps the loss equal to the unpadded mean).  On a 1-device
     mesh the host batches, the compiled step, and therefore the loss
     sequence are identical to ``SampledSource`` (test-enforced
-    bit-for-bit).
+    bit-for-bit).  With ``cfg.use_agg_kernel`` each shard runs the
+    tiled Pallas kernel on its local rows of the fan-out tree
+    (collective-free — the gather table derives from the row-sharded
+    batch).
     """
 
     name = "minibatch_sharded"
@@ -862,11 +884,6 @@ class ShardedSampledSource(SampledSource):
         mesh = self.mesh if self.mesh is not None else sh.node_mesh()
         self._mesh = mesh
         n_dev = int(np.prod(list(mesh.shape.values())))
-        if cfg.use_agg_kernel and n_dev > 1:
-            raise ValueError(
-                "ShardedSampledSource: use_agg_kernel is single-device "
-                "only (the Pallas gather does not partition over the "
-                "NODES axis yet) — run the einsum path on a mesh")
         if self.b % n_dev:               # surplus rows are masked out
             self.b += (-self.b) % n_dev
         self.pad = max(0, self.b - min(self.b_request,
@@ -875,6 +892,24 @@ class ShardedSampledSource(SampledSource):
         self._row_shardings: dict = {}
         self._repl_splits: dict = {}
         return self
+
+    @staticmethod
+    def _loss_impl(params, batch, consts, cfg: GNNConfig):
+        (mesh,) = consts
+        if len(batch) == 6:              # padded batch: masked mean
+            feats, masks, weights, self_w, labels, valid = batch
+        else:
+            feats, masks, weights, self_w, labels = batch
+            valid = None
+        logits = G.minibatch_forward(params, cfg, feats, masks, weights,
+                                     self_w, mesh=mesh)
+        return G.gnn_loss(logits, labels, cfg.loss, cfg.n_classes,
+                          valid=valid)
+
+    def loss_consts(self):
+        # static closed-over mesh for the shard_map'd kernel path (the
+        # memoized sh.node_mesh keeps the step-cache key stable)
+        return (self._mesh,)
 
     def _row_sharding(self, ndim: int):
         from repro import sharding as sh
@@ -983,7 +1018,8 @@ class ClusterSource(BatchSource):
                           valid=valid)
 
     def loss(self, params, batch):
-        return type(self)._loss_impl(params, batch, (), self.cfg)
+        return type(self)._loss_impl(params, batch, self.loss_consts(),
+                                     self.cfg)
 
     def _assemble(self, chosen):
         """Block-diagonal union of the chosen clusters, padded to the
@@ -1201,6 +1237,12 @@ class Trainer:
         # has one (FullGraphSource with max_deg: eval on the SAME capped
         # adjacency the old loop used, and no second full-width upload)
         self._ell = getattr(self.source, "ell", None) or _device_ell(graph)
+        # sharded sources + kernel: eval/full-loss partition the Pallas
+        # aggregation over the source's mesh too (the kernel cannot be
+        # GSPMD-partitioned; einsum-path runs keep mesh=None so their
+        # module-level jit cache entries stay shared with plain sources)
+        self._agg_mesh = (getattr(self.source, "_mesh", None)
+                          if cfg.use_agg_kernel else None)
 
         if type(self.source)._loss_impl is not None:
             # built-in sources: one compiled step per (source type,
@@ -1226,11 +1268,12 @@ class Trainer:
     def _eval_dev(self, params, nodes):
         idx, w, w_self, feats, labels = self._ell
         return _eval_acc(params, self._scfg, idx, w, w_self, feats,
-                         labels, nodes)
+                         labels, nodes, self._agg_mesh)
 
     def _full_loss_dev(self, params):
         return _cached_full_loss(self.graph, self.cfg, self._ell,
-                                 self.source.node_split("train"))(params)
+                                 self.source.node_split("train"),
+                                 mesh=self._agg_mesh)(params)
 
     def evaluate(self, params, nodes) -> float:
         return float(self._eval_dev(params, jnp.asarray(nodes)))

@@ -167,7 +167,9 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
           verbose: bool = False) -> List[Dict]:
     """Run the (b, β, sampler) product grid — the paper's §5 plane plus
     a sampler axis over the mini-batch families (``sources`` names from
-    ``PARADIGMS``: minibatch, minibatch_sharded, cluster, importance).
+    ``PARADIGMS``: minibatch, minibatch_sharded, cluster, importance;
+    fullgraph / fullgraph_sharded collapse to one point each since
+    neither b nor β applies at the (b=n, β=d_max) corner).
 
     ``fanout_grid`` entries are per-hop fan-out tuples (int entries are
     broadcast to all ``cfg.n_layers`` hops).  Each grid point gets a cfg
@@ -175,13 +177,23 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
     before any sampling or kernel work starts.
     """
     points: List[Tuple[str, Optional[int], Optional[Tuple[int, ...]]]] = []
+    seen = set()
     if include_fullgraph:
         points.append(("fullgraph", None, None))
-    seen = set()
+        seen.add("fullgraph")      # sources=("fullgraph", ...) dedups too
     for b, beta, src in itertools.product(batch_sizes, fanout_grid,
                                           sources):
         fo = (tuple(beta) if isinstance(beta, (tuple, list))
               else (int(beta),) * cfg.n_layers)
+        if src.startswith("fullgraph"):
+            # neither b nor β applies at the (b=n, β=d_max) corner:
+            # crossing the grid axes would just rerun one identical
+            # point per (b, β) cell — keep exactly one per source
+            if src in seen:
+                continue
+            seen.add(src)
+            points.append((src, None, None))
+            continue
         if src == "cluster":
             # fan-out does not apply to cluster batches: crossing the β
             # axis would just rerun identical, identically-labelled
@@ -197,7 +209,7 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
             if plan.ckpt_every:
                 # namespace checkpoints per grid point/seed so runs don't
                 # overwrite each other's ckpt_{step}.npz files
-                tag = (paradigm if paradigm == "fullgraph"
+                tag = (paradigm if paradigm.startswith("fullgraph")
                        else f"b{b}_f{'x'.join(map(str, fo))}"
                        if paradigm == "minibatch"
                        else f"{paradigm}_b{b}_f{'x'.join(map(str, fo))}")
@@ -253,11 +265,15 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
     ap.add_argument("--sources", nargs="+", default=["minibatch"],
                     help="sampler axis of the grid (see PARADIGMS): "
                          "minibatch, minibatch_sharded, cluster, "
-                         "importance")
+                         "importance, fullgraph_sharded")
     ap.add_argument("--layers", type=int, default=1)
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--eval-every", type=int, default=2)
     ap.add_argument("--fullgraph", action="store_true")
+    ap.add_argument("--kernel", action="store_true",
+                    help="run every grid point through the Pallas "
+                         "aggregation kernel (interpret mode — works on "
+                         "CPU and on multi-device meshes via shard_map)")
     ap.add_argument("--out", default="sweep_smoke")
     args = ap.parse_args(argv)
 
@@ -265,7 +281,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
     cfg = GNNConfig(name="sweep", model="graphsage", n_nodes=graph.n,
                     feat_dim=graph.feats.shape[1], hidden=32,
                     n_classes=graph.n_classes, n_layers=args.layers,
-                    fanout=(5,) * args.layers, batch_size=64, loss="ce")
+                    fanout=(5,) * args.layers, batch_size=64, loss="ce",
+                    use_agg_kernel=args.kernel, agg_interpret=True)
     plan = TrainPlan(lr=args.lr, n_iters=args.iters,
                      eval_every=args.eval_every)
     fo = (tuple(args.fanout) * args.layers if len(args.fanout) == 1

@@ -59,9 +59,18 @@ def init_gnn(key, cfg: GNNConfig, feat_dim: int) -> List[Dict[str, Any]]:
 # ---------------------------------------------------------------------------
 
 def _kernel_agg(cfg: GNNConfig, table, idx, w, self_rows=None,
-                w_self=None):
+                w_self=None, mesh=None):
     """Σ_k w[b,k] · table[idx[b,k]] (+ fused w_self[b] · self_rows[b]
-    epilogue) via the batch-tiled, double-buffered Pallas kernel."""
+    epilogue) via the batch-tiled, double-buffered Pallas kernel.  With
+    ``mesh`` the kernel runs shard-locally over the NODES axis
+    (shard_map: rows sharded, table replicated, dfeats psum'd in the
+    VJP); without it, single-device dispatch."""
+    if mesh is not None:
+        from repro.kernels.neighbor_agg.ops import neighbor_agg_sharded
+        return neighbor_agg_sharded(
+            table, idx, w, self_rows, w_self, mesh=mesh,
+            interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
+            d_tile=cfg.agg_d_tile, k_slab=cfg.agg_k_slab)
     from repro.kernels.neighbor_agg.ops import neighbor_agg
     return neighbor_agg(table, idx, w, self_rows, w_self,
                         use_kernel=True, kernel="tiled",
@@ -69,7 +78,8 @@ def _kernel_agg(cfg: GNNConfig, table, idx, w, self_rows=None,
                         d_tile=cfg.agg_d_tile, k_slab=cfg.agg_k_slab)
 
 
-def _wsum(cfg: GNNConfig, w_edge, h_nb, h_self=None, w_self=None):
+def _wsum(cfg: GNNConfig, w_edge, h_nb, h_self=None, w_self=None,
+          mesh=None):
     """Weighted neighbor sum over ALREADY-GATHERED features:
     out[..., :] = Σ_k w_edge[..., k] * h_nb[..., k, :]
                   [+ w_self[...] * h_self[..., :]].
@@ -78,15 +88,27 @@ def _wsum(cfg: GNNConfig, w_edge, h_nb, h_self=None, w_self=None):
     table + identity ids so the mini-batch path exercises the same tiled
     kernel (zero-weight padding edges stay exact); the optional self
     term rides the kernel's fused accumulator-init epilogue instead of
-    a separate output-sized elementwise pass."""
+    a separate output-sized elementwise pass.  With ``mesh`` the
+    flattened rows run shard-locally over the NODES axis (the table is
+    derived from the row-sharded tree level, so no collective is
+    needed)."""
     fused = h_self is not None
     if not cfg.use_agg_kernel:
         out = jnp.einsum("...k,...kd->...d", w_edge, h_nb)
         return out + w_self[..., None] * h_self if fused else out
     k, d = h_nb.shape[-2], h_nb.shape[-1]
     lead = h_nb.shape[:-2]
+    b = h_nb.reshape(-1, d).shape[0] // k
+    if mesh is not None:
+        from repro.kernels.neighbor_agg.ops import neighbor_agg_batch_sharded
+        out = neighbor_agg_batch_sharded(
+            w_edge.reshape(b, k), h_nb.reshape(b, k, d),
+            h_self.reshape(b, d) if fused else None,
+            w_self.reshape(b) if fused else None, mesh=mesh,
+            interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
+            d_tile=cfg.agg_d_tile, k_slab=cfg.agg_k_slab)
+        return out.reshape(lead + (d,))
     table = h_nb.reshape(-1, d)
-    b = table.shape[0] // k
     idx = jnp.arange(b * k, dtype=jnp.int32).reshape(b, k)
     out = _kernel_agg(cfg, table, idx, w_edge.reshape(b, k),
                       self_rows=h_self.reshape(b, d) if fused else None,
@@ -94,14 +116,14 @@ def _wsum(cfg: GNNConfig, w_edge, h_nb, h_self=None, w_self=None):
     return out.reshape(lead + (d,))
 
 
-def _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self):
+def _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self, mesh=None):
     """h_self [..., d]; h_nb [..., K, d]; w_edge [..., K]; w_self [...]."""
-    return _wsum(cfg, w_edge, h_nb, h_self, w_self) @ p["w"]
+    return _wsum(cfg, w_edge, h_nb, h_self, w_self, mesh=mesh) @ p["w"]
 
 
-def _sage_layer(cfg, p, h_self, h_nb, mask):
+def _sage_layer(cfg, p, h_self, h_nb, mask, mesh=None):
     cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
-    mean = _wsum(cfg, mask, h_nb) / cnt
+    mean = _wsum(cfg, mask, h_nb, mesh=mesh) / cnt
     return h_self @ p["w_self"] + mean @ p["w_neigh"]
 
 
@@ -123,11 +145,11 @@ def _gat_layer(p, h_self, h_nb, mask):
 
 
 def _apply_layer(cfg: GNNConfig, p, h_self, h_nb, mask, w_edge, w_self,
-                 last: bool):
+                 last: bool, mesh=None):
     if cfg.model == "gcn":
-        out = _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self)
+        out = _gcn_layer(cfg, p, h_self, h_nb, w_edge, w_self, mesh=mesh)
     elif cfg.model == "graphsage":
-        out = _sage_layer(cfg, p, h_self, h_nb, mask)
+        out = _sage_layer(cfg, p, h_self, h_nb, mask, mesh=mesh)
     else:
         out = _gat_layer(p, h_self, h_nb, mask)
         if last:  # average heads into class logits
@@ -141,7 +163,7 @@ def _apply_layer(cfg: GNNConfig, p, h_self, h_nb, mask, w_edge, w_self,
 # ---------------------------------------------------------------------------
 
 def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
-                       w_self):
+                       w_self, mesh=None):
     """feats [n, r]; ell_idx/ell_w [n, K]; w_self [n] -> logits [n, C].
 
     Distributed-execution shape (§Perf H1, measured in EXPERIMENTS.md):
@@ -160,6 +182,11 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
     source table — no [n, K, d] gather is materialized (the kernel DMAs
     rows tile-by-tile and keeps the (b_tile, d_tile) accumulator in
     VMEM).  GAT keeps the einsum path (per-edge softmax attention).
+
+    ``mesh`` (sharded sources) partitions the KERNEL path over the
+    NODES mesh axis via shard_map — ELL rows shard, the source table
+    replicates, and the VJP psum-reduces the table gradient; the einsum
+    path ignores it (GSPMD partitions that one by itself).
     """
     from repro import sharding as sh
 
@@ -178,7 +205,8 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
         """Σ_k w_edge[n,k] · src[ell_idx[n,k]] without the [n,K,d] blowup."""
         if cfg.use_agg_kernel:
             return _kernel_agg(cfg, replicate(src), ell_idx,
-                               w_edge.astype(agg_dt)).astype(h.dtype)
+                               w_edge.astype(agg_dt),
+                               mesh=mesh).astype(h.dtype)
         return jnp.einsum("nk,nkd->nd", w_edge.astype(agg_dt),
                           gather(src)).astype(h.dtype)
 
@@ -194,8 +222,8 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
                 srcr = replicate(src)
                 agg = _kernel_agg(cfg, srcr, ell_idx,
                                   ell_w.astype(agg_dt), self_rows=srcr,
-                                  w_self=w_self.astype(agg_dt)
-                                  ).astype(h.dtype)
+                                  w_self=w_self.astype(agg_dt),
+                                  mesh=mesh).astype(h.dtype)
             else:
                 agg = agg_w(src, ell_w) + w_self[:, None] * src
             out = agg if pre else agg @ w
@@ -221,9 +249,12 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
 # ---------------------------------------------------------------------------
 
 def minibatch_forward(params, cfg: GNNConfig, hop_feats: Sequence,
-                      masks: Sequence, weights: Sequence, self_w: Sequence):
+                      masks: Sequence, weights: Sequence, self_w: Sequence,
+                      mesh=None):
     """hop_feats[d]: [b, f1..fd, r]; masks/weights[d]: [b, f1..f(d+1)].
-    Layer l aggregates hop d+1 into hop d for d < L - l."""
+    Layer l aggregates hop d+1 into hop d for d < L - l.  ``mesh``
+    (sharded sources) runs the kernel path shard-locally over the
+    NODES-sharded target axis; the einsum path ignores it."""
     hs = list(hop_feats)
     n_layers = len(params)
     for li, p in enumerate(params):
@@ -232,7 +263,8 @@ def minibatch_forward(params, cfg: GNNConfig, hop_feats: Sequence,
         for d in range(len(hs) - 1):
             new_hs.append(_apply_layer(
                 cfg, p, hs[d], hs[d + 1],
-                masks[d].astype(hs[d].dtype), weights[d], self_w[d], last))
+                masks[d].astype(hs[d].dtype), weights[d], self_w[d], last,
+                mesh=mesh))
         hs = new_hs
     assert len(hs) == 1
     return hs[0]                                      # [b, C]

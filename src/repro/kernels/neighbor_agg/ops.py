@@ -10,7 +10,16 @@ mini-batch SGD) can differentiate through the kernel:
     d/dw     = <g[b], feats[idx[b,k]]>
 
 Padding is with zero-weight edges pointing at row 0, which the kernels
-treat exactly (0 * row == 0)."""
+treat exactly (0 * row == 0).
+
+Mesh-partitioned entry points (kernels/README.md "Sharding"):
+``neighbor_agg_sharded`` runs the tiled kernel shard-locally over the
+NODES mesh axis via shard_map — output rows / ids / weights sharded,
+the feature table replicated so the software gather never crosses a
+shard — with the custom VJP extended to psum-reduce ``dfeats`` across
+shards; ``neighbor_agg_batch_sharded`` is the mini-batch twin over an
+already-gathered fan-out level, where the flattened table itself is
+row-sharded and NO collective is needed in either direction."""
 from __future__ import annotations
 
 import functools
@@ -114,6 +123,50 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
+def _tiled_call(feats, idx, w, self_rows, w_self, static):
+    """Tile-pad + tiled-kernel dispatch, shared by the jit wrapper below
+    and the shard-local bodies of the sharded entry points (the padding
+    must be IDENTICAL in both so the sharded path stays bit-equal to the
+    unsharded one on a 1-device mesh)."""
+    _, _, d_tile, b_tile, k_slab = static
+    b, k = idx.shape
+    d = feats.shape[1]
+    feats_p = _pad_to(feats, 1, d_tile)
+    idx_p = _pad_to(_pad_to(idx, 0, b_tile), 1, k_slab)
+    w_p = _pad_to(_pad_to(w, 0, b_tile), 1, k_slab)
+    if self_rows is not None:
+        self_p = _pad_to(_pad_to(self_rows, 0, b_tile), 1, d_tile)
+        wself_p = _pad_to(w_self, 0, b_tile)
+        out = _agg_self(feats_p, idx_p, w_p, self_p, wself_p, static)
+    else:
+        out = _agg(feats_p, idx_p, w_p, static)
+    return out[:b, :d]
+
+
+def _tiled_grads(static, feats, idx, w, self_rows, w_self, g):
+    """Gradients of ``_tiled_call`` spelled out: the same pad ->
+    ``_agg*_bwd`` -> slice composition jax's transpose machinery
+    produces for the jit wrapper, so the shard-local backward of the
+    sharded entry points is bit-identical to the unsharded kernel
+    path's.  Returns ``(dfeats, dw, dself_rows, dw_self)`` (the last
+    two ``None`` when not fused)."""
+    _, _, d_tile, b_tile, k_slab = static
+    b, k = idx.shape
+    d = feats.shape[1]
+    feats_p = _pad_to(feats, 1, d_tile)
+    idx_p = _pad_to(_pad_to(idx, 0, b_tile), 1, k_slab)
+    w_p = _pad_to(_pad_to(w, 0, b_tile), 1, k_slab)
+    g_p = _pad_to(_pad_to(g, 0, b_tile), 1, d_tile)
+    if self_rows is not None:
+        self_p = _pad_to(_pad_to(self_rows, 0, b_tile), 1, d_tile)
+        wself_p = _pad_to(w_self, 0, b_tile)
+        df, _, dw, dself, dwself = _agg_self_bwd(
+            static, (feats_p, idx_p, w_p, self_p, wself_p), g_p)
+        return df[:, :d], dw[:b, :k], dself[:b, :d], dwself[:b]
+    df, _, dw = _agg_bwd(static, (feats_p, idx_p, w_p), g_p)
+    return df[:, :d], dw[:b, :k], None, None
+
+
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
                                              "kernel", "d_tile", "b_tile",
                                              "k_slab"))
@@ -140,18 +193,204 @@ def neighbor_agg(feats, idx, w, self_rows=None, w_self=None, *,
         return out + w_self[:, None] * self_rows if fused else out
     b, k = idx.shape
     d = feats.shape[1]
-    feats_p = _pad_to(feats, 1, d_tile)
     static = (kernel, interpret, d_tile, b_tile, k_slab)
     if kernel == "row":
-        out = _agg(feats_p, idx, w, static)[:b, :d]
+        out = _agg(_pad_to(feats, 1, d_tile), idx, w, static)[:b, :d]
         return out + w_self[:, None] * self_rows if fused else out
-    idx_p = _pad_to(_pad_to(idx, 0, b_tile), 1, k_slab)
-    w_p = _pad_to(_pad_to(w, 0, b_tile), 1, k_slab)
+    # padded rows carry w_self = 0, so the fused epilogue stays exact
+    return _tiled_call(feats, idx, w, self_rows if fused else None,
+                       w_self if fused else None, static)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-partitioned entry points (shard_map over the NODES axis)
+# ---------------------------------------------------------------------------
+# The tiled kernel runs SHARD-LOCALLY: every shard owns a contiguous row
+# block of the output / idx / w (+ self_rows / w_self) and gathers from a
+# replicated feature table, so the forward needs no collective at all.
+# Only the VJP's dfeats — a scatter-add into the REPLICATED table — must
+# be psum-reduced across shards; dw / dself_rows / dw_self are row-local
+# like their primals.  See kernels/README.md "Sharding".
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _agg_sharded(feats, idx, w, self_rows, w_self, sstatic):
+    from repro import sharding as sh
+    mesh, static = sstatic
+    fused = self_rows is not None
+    ins, row = sh.ell_agg_specs(mesh, fused)
     if fused:
-        # padded rows carry w_self = 0, so the fused epilogue stays exact
-        self_p = _pad_to(_pad_to(self_rows, 0, b_tile), 1, d_tile)
-        wself_p = _pad_to(w_self, 0, b_tile)
-        out = _agg_self(feats_p, idx_p, w_p, self_p, wself_p, static)
-    else:
-        out = _agg(feats_p, idx_p, w_p, static)
-    return out[:b, :d]
+        def local(f, i, ww, sr, ws):
+            return _tiled_call(f, i, ww, sr, ws, static)
+        return sh.shard_map(local, mesh, ins, row)(feats, idx, w,
+                                                   self_rows, w_self)
+
+    def local(f, i, ww):
+        return _tiled_call(f, i, ww, None, None, static)
+    return sh.shard_map(local, mesh, ins, row)(feats, idx, w)
+
+
+def _agg_sharded_fwd(feats, idx, w, self_rows, w_self, sstatic):
+    return (_agg_sharded(feats, idx, w, self_rows, w_self, sstatic),
+            (feats, idx, w, self_rows, w_self))
+
+
+def _agg_sharded_bwd(sstatic, res, g):
+    from repro import sharding as sh
+    mesh, static = sstatic
+    feats, idx, w, self_rows, w_self = res
+    fused = self_rows is not None
+    ax = sh.nodes_axis(mesh)
+    ins, row = sh.ell_agg_specs(mesh, fused)
+    repl = ins[0]
+    didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
+    if fused:
+        def local(f, i, ww, sr, ws, gg):
+            df, dw, dsr, dws = _tiled_grads(static, f, i, ww, sr, ws, gg)
+            return jax.lax.psum(df, ax), dw, dsr, dws
+
+        row1 = ins[4]                       # the w_self spec: P(NODES)
+        df, dw, dsr, dws = sh.shard_map(
+            local, mesh, ins + (row,), (repl, row, row, row1)
+        )(feats, idx, w, self_rows, w_self, g)
+        return df, didx, dw, dsr, dws
+
+    def local(f, i, ww, gg):
+        df, dw, _, _ = _tiled_grads(static, f, i, ww, None, None, gg)
+        return jax.lax.psum(df, ax), dw
+
+    df, dw = sh.shard_map(local, mesh, ins + (row,),
+                          (repl, row))(feats, idx, w, g)
+    return df, didx, dw, None, None
+
+
+_agg_sharded.defvjp(_agg_sharded_fwd, _agg_sharded_bwd)
+
+
+def neighbor_agg_sharded(feats, idx, w, self_rows=None, w_self=None, *,
+                         mesh=None, use_kernel: bool = True,
+                         interpret: bool = True, d_tile: int = 128,
+                         b_tile: int = 8, k_slab: int = 4):
+    """``out[b] = Σ_k w[b,k]·feats[idx[b,k]] [+ w_self[b]·self_rows[b]]``
+    partitioned over the NODES axis of ``mesh``: output rows / ``idx`` /
+    ``w`` / ``self_rows`` / ``w_self`` shard their leading axis, the
+    feature table replicates (the per-shard software gather is then
+    purely local).  Rows pad internally up to a shard-count multiple
+    with zero-weight edges, so any B is legal.
+
+    On a 1-device mesh this is bit-identical to
+    ``neighbor_agg(..., kernel="tiled")`` — forward AND gradients (the
+    shard-local VJP mirrors the unsharded one exactly; the dfeats psum
+    is an identity there).  ``mesh=None`` or ``use_kernel=False``
+    dispatch straight to ``neighbor_agg`` (einsum path partitioning is
+    GSPMD's job, not shard_map's)."""
+    fused = self_rows is not None
+    assert fused == (w_self is not None), \
+        "self_rows and w_self must be passed together"
+    if mesh is None or not use_kernel:
+        return neighbor_agg(feats, idx, w, self_rows, w_self,
+                            use_kernel=use_kernel, interpret=interpret,
+                            kernel="tiled", d_tile=d_tile, b_tile=b_tile,
+                            k_slab=k_slab)
+    from repro import sharding as sh
+    b = idx.shape[0]
+    n_sh = sh.nodes_shards(mesh)
+    idx = _pad_to(idx, 0, n_sh)
+    w = _pad_to(w, 0, n_sh)
+    if fused:
+        self_rows = _pad_to(self_rows, 0, n_sh)
+        w_self = _pad_to(w_self, 0, n_sh)
+    static = ("tiled", interpret, d_tile, b_tile, k_slab)
+    out = _agg_sharded(feats, idx, w, self_rows, w_self, (mesh, static))
+    return out[:b] if out.shape[0] != b else out
+
+
+# -- already-gathered (mini-batch fan-out) variant --------------------------
+# The flattened [B*K, D] table is DERIVED from the row-sharded h_nb, so
+# table rows live on the same shard as the output rows they feed: both
+# the forward and the VJP are collective-free.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _agg_batch_sharded(w, h_nb, h_self, w_self, sstatic):
+    from repro import sharding as sh
+    mesh, static = sstatic
+    fused = h_self is not None
+    ax = sh.nodes_axis(mesh)
+    from jax.sharding import PartitionSpec as P
+
+    def row(nd):
+        return P(*((ax,) + (None,) * (nd - 1)))
+
+    def local(ww, nb, *rest):
+        bl, k = ww.shape
+        d = nb.shape[-1]
+        table = nb.reshape(bl * k, d)
+        ids = jnp.arange(bl * k, dtype=jnp.int32).reshape(bl, k)
+        sr, ws = rest if rest else (None, None)
+        return _tiled_call(table, ids, ww, sr, ws, static)
+
+    ops = (w, h_nb) + ((h_self, w_self) if fused else ())
+    ins = tuple(row(o.ndim) for o in ops)
+    return sh.shard_map(local, mesh, ins, row(2))(*ops)
+
+
+def _agg_batch_sharded_fwd(w, h_nb, h_self, w_self, sstatic):
+    return (_agg_batch_sharded(w, h_nb, h_self, w_self, sstatic),
+            (w, h_nb, h_self, w_self))
+
+
+def _agg_batch_sharded_bwd(sstatic, res, g):
+    from repro import sharding as sh
+    mesh, static = sstatic
+    w, h_nb, h_self, w_self = res
+    fused = h_self is not None
+    ax = sh.nodes_axis(mesh)
+    from jax.sharding import PartitionSpec as P
+
+    def row(nd):
+        return P(*((ax,) + (None,) * (nd - 1)))
+
+    def local(ww, nb, *rest):
+        *sr_ws, gg = rest
+        bl, k = ww.shape
+        d = nb.shape[-1]
+        table = nb.reshape(bl * k, d)
+        ids = jnp.arange(bl * k, dtype=jnp.int32).reshape(bl, k)
+        sr, ws = sr_ws if sr_ws else (None, None)
+        df, dw, dsr, dws = _tiled_grads(static, table, ids, ww, sr, ws, gg)
+        dnb = df.reshape(nb.shape)
+        return (dw, dnb) + ((dsr, dws) if fused else ())
+
+    ops = (w, h_nb) + ((h_self, w_self) if fused else ()) + (g,)
+    ins = tuple(row(o.ndim) for o in ops)
+    outs = (row(2), row(h_nb.ndim)) + ((row(2), row(1)) if fused else ())
+    grads = sh.shard_map(local, mesh, ins, outs)(*ops)
+    return tuple(grads) if fused else tuple(grads) + (None, None)
+
+
+_agg_batch_sharded.defvjp(_agg_batch_sharded_fwd, _agg_batch_sharded_bwd)
+
+
+def neighbor_agg_batch_sharded(w, h_nb, h_self=None, w_self=None, *, mesh,
+                               interpret: bool = True, d_tile: int = 128,
+                               b_tile: int = 8, k_slab: int = 4):
+    """Tiled-kernel weighted sum over an ALREADY-GATHERED fan-out level
+    (``h_nb [B, K, D]``, ``w [B, K]`` [+ fused ``h_self [B, D]`` /
+    ``w_self [B]``]) with the target rows sharded over NODES: each shard
+    flattens its local block to a ``[b_loc*K, D]`` table with identity
+    ids and runs the same tiled kernel the unsharded mini-batch path
+    uses — no collective in the forward or the VJP.  B must divide by
+    the NODES shard count (the sharded mini-batch source rounds its
+    batch up at bind, and fan-out products keep every level
+    divisible)."""
+    fused = h_self is not None
+    assert fused == (w_self is not None), \
+        "h_self and w_self must be passed together"
+    from repro import sharding as sh
+    n_sh = sh.nodes_shards(mesh)
+    if w.shape[0] % n_sh:
+        raise ValueError(
+            f"neighbor_agg_batch_sharded: B={w.shape[0]} must be a "
+            f"multiple of the {n_sh} NODES shards (the sharded sources "
+            f"round b up to a mesh multiple at bind)")
+    static = ("tiled", interpret, d_tile, b_tile, k_slab)
+    return _agg_batch_sharded(w, h_nb, h_self, w_self, (mesh, static))

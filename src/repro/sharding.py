@@ -7,6 +7,7 @@ batch shards over every chip.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -114,15 +115,22 @@ def batch_mesh_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
 
 
+@functools.lru_cache(maxsize=None)
+def _node_mesh_cached(n_devices: int) -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:n_devices]), ("data",))
+
+
 def node_mesh(n_devices: Optional[int] = None) -> Mesh:
     """One-axis ("data",) mesh over the local devices — the NODES
     logical axis resolves onto it, so a NODES-sharded array lays its
     rows out data-parallel over every local device (GNN full-graph
-    training; see engine.ShardedFullGraphSource)."""
-    devs = jax.devices()
-    if n_devices is not None:
-        devs = devs[:n_devices]
-    return Mesh(np.asarray(devs), ("data",))
+    training; see engine.ShardedFullGraphSource).
+
+    Memoized per device count: repeated binds (every sweep grid point
+    re-binds its source) must hand back the SAME Mesh object, so step
+    caches keyed on the closed-over constants' identity keep hitting."""
+    return _node_mesh_cached(len(jax.devices()) if n_devices is None
+                             else n_devices)
 
 
 def row_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
@@ -130,6 +138,47 @@ def row_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
     shared by ShardedFullGraphSource's ELL rows and
     ShardedSampledSource's per-batch target axis."""
     return named((NODES,) + (None,) * (ndim - 1), mesh)
+
+
+# --- NODES-partitioned kernels (shard_map) ---------------------------------
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Version-compat shard_map (``jax.shard_map``/``check_vma`` on new
+    jax, ``jax.experimental.shard_map``/``check_rep`` on 0.4.x) with
+    replication checking OFF: the neighbor-agg kernels place their psum
+    explicitly in the custom VJP (see kernels/README.md "Sharding")."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def nodes_axis(mesh: Mesh):
+    """The mesh axis name(s) the NODES logical axis resolves onto
+    ("data", or ("pod", "data") on a multi-pod mesh)."""
+    return axis_map(mesh)[NODES]
+
+
+def nodes_shards(mesh: Mesh) -> int:
+    """Number of shards along the NODES logical axis."""
+    ax = nodes_axis(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ax = (ax,) if isinstance(ax, str) else ax
+    return int(np.prod([sizes[a] for a in ax]))
+
+
+def ell_agg_specs(mesh: Mesh, fused: bool) -> Tuple[Tuple[P, ...], P]:
+    """(in_specs, out_spec) for the NODES-partitioned neighbor
+    aggregation: output rows / ``idx`` / ``w`` (+ ``self_rows`` /
+    ``w_self`` when fused) shard their leading axis over NODES, the
+    feature table replicates — the per-shard gather is then purely
+    local and only the VJP's dfeats needs a cross-shard psum."""
+    ax = nodes_axis(mesh)
+    row2, row1, repl = P(ax, None), P(ax), P(None, None)
+    ins = (repl, row2, row2) + ((row2, row1) if fused else ())
+    return ins, row2
 
 
 def constrain(x, logical: Sequence[Optional[str]]):
