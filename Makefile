@@ -1,4 +1,5 @@
-.PHONY: check test bench-quick bench-engine bench-engine-baseline sweep-smoke
+.PHONY: check test bench-quick bench-engine bench-engine-baseline \
+	sweep-smoke chaos
 
 check:
 	bash scripts/ci.sh
@@ -16,6 +17,11 @@ bench-engine:
 
 bench-engine-baseline:
 	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --devices 4
+
+chaos:
+	PYTHONPATH=src python -m pytest -x -q tests/test_chaos.py \
+	tests/test_checkpoint.py tests/test_resume.py
+	PYTHONPATH=src python scripts/sweep_resume_smoke.py
 
 sweep-smoke:
 	PYTHONPATH=src:. python -c "from repro.core.experiment import main; \

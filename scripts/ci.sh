@@ -30,3 +30,7 @@ echo "== experiment sweep smoke (2 minibatch grid points + one point =="
 echo "== per scenario source: cluster / importance / minibatch_sharded, =="
 echo "== plus one sharded x Pallas-kernel point, interpret mode) =="
 make sweep-smoke
+
+echo "== chaos suite (fault injection: worker death, NaN steps, =="
+echo "== kill-mid-checkpoint, sweep journal kill/resume) =="
+make chaos

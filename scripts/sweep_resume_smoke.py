@@ -1,0 +1,66 @@
+"""CI smoke for crash-safe sweeps (scripts/ci.sh, `make chaos`).
+
+Simulates the real failure mode end to end: a sweep over two grid
+points is killed right after the first point finishes (armed
+``sweep.after_point`` failpoint -> SimulatedCrash), then rerun with the
+same journal.  The resumed sweep must (a) NOT rerun the completed
+point — its row comes back from the journal — and (b) finish the grid,
+leaving exactly one journal line per point.
+
+    PYTHONPATH=src python scripts/sweep_resume_smoke.py
+"""
+import json
+import os
+import sys
+import tempfile
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.configs.base import GNNConfig                    # noqa: E402
+from repro.core import faults                               # noqa: E402
+from repro.core.engine import TrainPlan                     # noqa: E402
+from repro.core.experiment import sweep                     # noqa: E402
+from repro.data import make_preset                          # noqa: E402
+
+
+def main() -> int:
+    graph = make_preset("arxiv-like", n=200, seed=0)
+    cfg = GNNConfig(name="smoke", model="graphsage", n_nodes=graph.n,
+                    feat_dim=graph.feats.shape[1], hidden=16,
+                    n_classes=graph.n_classes, n_layers=1, fanout=(3,),
+                    batch_size=32, loss="ce")
+    plan = TrainPlan(lr=0.3, n_iters=3, eval_every=2)
+    kw = dict(batch_sizes=[16, 32], fanout_grid=[(3,)], verbose=True)
+
+    with tempfile.TemporaryDirectory() as d:
+        journal = os.path.join(d, "sweep.jsonl")
+
+        # -- run 1: killed right after point 1 is journaled ------------
+        crashed = False
+        try:
+            with faults.armed("sweep.after_point", at_hits=(0,)):
+                sweep(graph, cfg, plan, journal=journal, **kw)
+        except faults.SimulatedCrash:
+            crashed = True
+        assert crashed, "failpoint sweep.after_point did not fire"
+        lines = [json.loads(l) for l in open(journal)]
+        assert len(lines) == 1 and lines[0]["status"] == "ok", lines
+        first_row = lines[0]["row"]
+
+        # -- run 2: same journal — resume must skip point 1 ------------
+        rows = sweep(graph, cfg, plan, journal=journal, **kw)
+        lines = [json.loads(l) for l in open(journal)]
+        assert len(rows) == 2, rows
+        # one journal line per point: point 1 was NOT rerun
+        assert len(lines) == 2, lines
+        assert [l["status"] for l in lines] == ["ok", "ok"]
+        # the skipped point's row is the journaled one, verbatim
+        assert rows[0] == first_row, (rows[0], first_row)
+
+    print("sweep_resume_smoke: OK (point 1 journaled once, "
+          "resume skipped it, grid completed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

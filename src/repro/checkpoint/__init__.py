@@ -1,1 +1,4 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointCorruptError, CheckpointDtypeError, CheckpointError,
+    CheckpointKeyError, CheckpointShapeError, available_steps,
+    latest_step, load_metadata, restore_checkpoint, save_checkpoint)

@@ -7,7 +7,8 @@ from repro.core.trainer import train_full_graph, train_minibatch, TrainResult  #
 from repro.core.engine import (  # noqa: F401
     Trainer, TrainPlan, BatchSource, FullGraphSource, SampledSource,
     ClusterSource, ImportanceSampledSource, ShardedSampledSource,
-    ShardedFullGraphSource,
-    Callback, HistoryCallback, EarlyStop, CheckpointCallback)
+    ShardedFullGraphSource, BadStepPolicy, NonFiniteStepError,
+    Callback, HistoryCallback, EarlyStop, CheckpointCallback,
+    save_trainer_state)
 from repro.core.experiment import run_experiment, sweep, save_rows  # noqa: F401
-from repro.core import theory, metrics, wasserstein  # noqa: F401
+from repro.core import faults, theory, metrics, wasserstein  # noqa: F401

@@ -215,6 +215,64 @@ def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes,
 # TrainPlan
 # ---------------------------------------------------------------------------
 
+class NonFiniteStepError(RuntimeError):
+    """A jitted step produced a non-finite loss or gradient and the
+    plan's ``BadStepPolicy`` escalated to raise."""
+
+    def __init__(self, it: int, loss: float, consecutive: int):
+        super().__init__(
+            f"non-finite loss/gradients at iteration {it} "
+            f"(loss={loss}, {consecutive} consecutive bad step"
+            f"{'s' if consecutive != 1 else ''})")
+        self.it = it
+        self.loss = loss
+        self.consecutive = consecutive
+
+
+@dataclasses.dataclass(frozen=True)
+class BadStepPolicy:
+    """What the Trainer does when the in-step ``isfinite`` guard trips
+    (docs/training_api.md "Fault tolerance" has the full matrix).
+
+    The guard itself is always in the compiled step: a bad step leaves
+    params/opt_state UNCHANGED on device (a ``where`` select), so by the
+    time the host learns about it — one iteration late under
+    ``deferred_sync`` — the next step has already run from the last good
+    params with a fresh batch.  That makes ``"skip"`` exactly
+    skip-and-resample, with no pipeline stall.
+
+    - ``on_bad="raise"``: abort with ``NonFiniteStepError`` at the first
+      bad step (the default: silent NaNs are how convergence curves lie).
+    - ``on_bad="skip"``: tolerate up to ``max_consecutive`` bad steps in
+      a row (History records them in ``bad_steps``), then ``escalate``
+      ("raise", or "rollback" when checkpointing is on).
+    - ``on_bad="rollback"``: skip until ``max_consecutive`` consecutive
+      bad steps, then restore params/opt_state from the newest
+      checkpoint and continue with fresh batches; more than
+      ``max_rollbacks`` restores aborts.  Requires ``ckpt_every > 0``
+      (validated at Trainer construction).
+    """
+
+    on_bad: str = "raise"            # raise | skip | rollback
+    max_consecutive: int = 3         # skip/rollback escalation threshold
+    escalate: str = "raise"          # skip's escalation: raise | rollback
+    max_rollbacks: int = 3
+
+    def __post_init__(self):
+        if self.on_bad not in ("raise", "skip", "rollback"):
+            raise ValueError(f"BadStepPolicy.on_bad must be raise|skip|"
+                             f"rollback, got {self.on_bad!r}")
+        if self.escalate not in ("raise", "rollback"):
+            raise ValueError(f"BadStepPolicy.escalate must be raise|"
+                             f"rollback, got {self.escalate!r}")
+        if self.max_consecutive < 1:
+            raise ValueError("BadStepPolicy.max_consecutive must be >= 1")
+
+    def needs_ckpt(self) -> bool:
+        return (self.on_bad == "rollback"
+                or (self.on_bad == "skip" and self.escalate == "rollback"))
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainPlan:
     """Declarative spec for one training run (what used to be ~10 loose
@@ -237,6 +295,9 @@ class TrainPlan:
     # --- throughput knobs (docs/training_api.md) ---
     donate: bool = True                 # donate params/opt_state/batch
     deferred_sync: bool = True          # lag the float(loss) host sync
+    # --- fault tolerance (docs/training_api.md "Fault tolerance") ---
+    ckpt_keep_last: int = 0             # checkpoint retention (0 = all)
+    bad_steps: BadStepPolicy = BadStepPolicy()
 
     def make_schedule(self):
         if self.schedule in (None, "constant"):
@@ -273,6 +334,23 @@ def _opt_key(plan: TrainPlan) -> Tuple:
             plan.n_iters if plan.schedule == "cosine" else 0)
 
 
+def _guarded_update(opt, params, opt_state, loss, grads):
+    """Optimizer update behind the non-finite step guard: a cheap
+    ``isfinite`` reduction over loss + gradients is folded into the
+    jitted step, and a bad step applies the IDENTITY update (``where``
+    select keeps the old params/opt_state buffers bit-for-bit).  On a
+    good step the select passes the new values through exactly, so the
+    guard is value-invariant — the pre-PR-6 golden loss sequences are
+    unchanged.  Returns (params, opt_state, good)."""
+    good = jnp.isfinite(loss)
+    for g in jax.tree.leaves(grads):
+        good = good & jnp.all(jnp.isfinite(g))
+    new_params, new_opt = opt.update(grads, opt_state, params)
+    sel = lambda new, old: jnp.where(good, new, old)  # noqa: E731
+    return (jax.tree.map(sel, new_params, params),
+            jax.tree.map(sel, new_opt, opt_state), good)
+
+
 def _cached_step(graph: Graph, src_cls: type, consts: Tuple,
                  cfg: GNNConfig, plan: TrainPlan):
     """Compiled train step, cached ON THE GRAPH across Trainer instances.
@@ -296,8 +374,9 @@ def _cached_step(graph: Graph, src_cls: type, consts: Tuple,
             loss, grads = jax.value_and_grad(
                 lambda p: src_cls._loss_impl(p, batch, consts, scfg)
             )(params)
-            params, opt_state = opt.update(grads, opt_state, params)
-            return params, opt_state, loss
+            params, opt_state, good = _guarded_update(
+                opt, params, opt_state, loss, grads)
+            return params, opt_state, loss, good
 
         fn = jax.jit(step,
                      donate_argnums=(0, 1, 2) if plan.donate else ())
@@ -367,6 +446,21 @@ class BatchSource:
 
     def close(self) -> None:
         pass
+
+    # -- exact-resume hooks --------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable batch-stream position, saved inside every
+        TrainerState checkpoint (sampled sources: consumed count + the
+        rng bit-generator state after the last consumed draw).  Sources
+        whose batches are constant across iterations have none."""
+        return {}
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore the stream position saved by ``state_dict`` (called
+        between ``bind`` and ``batches`` on resume)."""
+        if sd:
+            raise ValueError(f"{type(self).__name__} has no stream state "
+                             f"to restore, got keys {sorted(sd)}")
 
 
 class FullGraphSource(BatchSource):
@@ -543,9 +637,15 @@ class SampledSource(BatchSource):
         self._pf: Optional[Prefetcher] = None
         self._ring: Optional[HostStagingRing] = None
         self._inflight: List[int] = []   # staging slots awaiting done()
+        self._consumed = 0               # batches delivered so far
+        self._last_rng_state = None      # rng state after last delivery
+        self._resume_rng_state = None    # restored position (resume)
 
     def bind(self, graph, cfg, plan):
         self.graph, self.cfg = graph, cfg
+        self._consumed = 0
+        self._last_rng_state = None
+        self._resume_rng_state = None
         n_train = len(graph.train_nodes)
         if n_train == 0:
             raise ValueError(
@@ -691,24 +791,50 @@ class SampledSource(BatchSource):
             self._inflight.append(slot)
         return jax.device_put(host)
 
+    def state_dict(self):
+        return {"consumed": self._consumed,
+                "rng_state": self._last_rng_state}
+
+    def load_state_dict(self, sd):
+        if not sd:
+            return
+        self._consumed = int(sd["consumed"])
+        self._resume_rng_state = sd.get("rng_state")
+        if self._consumed and self._resume_rng_state is None:
+            raise ValueError(
+                f"{type(self).__name__}: checkpoint records "
+                f"{self._consumed} consumed batches but no rng state — "
+                f"cannot resume the stream exactly")
+
     def batches(self):
+        # resume-aware: a restored stream starts at batch `_consumed`
+        # with the rng fast-forwarded to the checkpointed state, so the
+        # sequence continues bit-for-bit where the checkpoint left off
+        remaining = self.n_iters - self._consumed
         if self.prefetch:
             self._pf = Prefetcher(self.graph, self.b_request, self.fanouts,
                                   seed=self.seed, depth=self.depth,
-                                  n_batches=self.n_iters,
+                                  n_batches=remaining,
                                   payload_fn=self._host_batch,
-                                  sample_fn=self._sample)
+                                  sample_fn=self._sample,
+                                  rng_state=self._resume_rng_state)
             try:
-                for _ in range(self.n_iters):
+                for _ in range(remaining):
                     fb, payload = self._pf.next()
+                    self._last_rng_state = self._pf.last_rng_state
+                    self._consumed += 1
                     yield self._to_device(payload), fb.batch_size
             finally:
                 self.close()
         else:
             rng = np.random.default_rng(self.seed)
-            for _ in range(self.n_iters):
+            if self._resume_rng_state is not None:
+                rng.bit_generator.state = self._resume_rng_state
+            for _ in range(remaining):
                 fb = self._sample(rng, self.graph, self.b_request,
                                   self.fanouts)
+                self._last_rng_state = rng.bit_generator.state
+                self._consumed += 1
                 yield self._to_device(self._host_batch(self.graph, fb)), \
                     fb.batch_size
 
@@ -1008,6 +1134,9 @@ class ClusterSource(BatchSource):
                         for c in blocks.clusters]
         self.n_iters = plan.n_iters
         self.seed = plan.seed
+        self._consumed = 0
+        self._last_rng_state = None
+        self._resume_rng_state = None
         return self
 
     @staticmethod
@@ -1060,14 +1189,33 @@ class ClusterSource(BatchSource):
             chosen[0] = train_cluster
         return self._assemble(chosen)
 
+    def state_dict(self):
+        return {"consumed": self._consumed,
+                "rng_state": self._last_rng_state}
+
+    def load_state_dict(self, sd):
+        if not sd:
+            return
+        self._consumed = int(sd["consumed"])
+        self._resume_rng_state = sd.get("rng_state")
+        if self._consumed and self._resume_rng_state is None:
+            raise ValueError(
+                "ClusterSource: checkpoint records "
+                f"{self._consumed} consumed batches but no rng state — "
+                "cannot resume the stream exactly")
+
     def batches(self):
+        remaining = self.n_iters - self._consumed
         self._pf = Prefetcher(self.graph, self.k, (), seed=self.seed,
-                              depth=2, n_batches=self.n_iters,
+                              depth=2, n_batches=remaining,
                               payload_fn=lambda g, batch: None,
-                              sample_fn=self._sample_union)
+                              sample_fn=self._sample_union,
+                              rng_state=self._resume_rng_state)
         try:
-            for _ in range(self.n_iters):
+            for _ in range(remaining):
                 (host, n_valid), _ = self._pf.next()
+                self._last_rng_state = self._pf.last_rng_state
+                self._consumed += 1
                 yield jax.device_put(host), n_valid
         finally:
             self.close()
@@ -1102,6 +1250,8 @@ class TrainState:
     full_loss_fn: Optional[TCallable] = None   # params -> full objective
     stop: bool = False
     stop_reason: Optional[str] = None
+    step_bad: bool = False            # this step tripped the NaN guard
+    rollback_pending: bool = False    # BadStepPolicy requested a restore
 
     def request_stop(self, reason: str) -> None:
         if not self.stop:
@@ -1142,6 +1292,8 @@ class HistoryCallback(Callback):
     def on_step(self, state):
         state.history.record(state.loss, state.val_acc,
                              nodes=state.n_nodes)
+        if state.step_bad:
+            state.history.bad_steps.append(state.it + 1)
         if state.source.loss_is_full_loss:
             # full-graph training: the per-iteration loss IS the full loss
             state.history.full_losses.append(state.loss)
@@ -1171,24 +1323,47 @@ class EarlyStop(Callback):
             state.request_stop(f"target_acc>={ta}")
 
 
+def save_trainer_state(state: TrainState, final: bool = False) -> str:
+    """One exact-resume snapshot: params + opt_state in the npz, the
+    engine state (iteration, source stream position/rng, History) in the
+    step's metadata JSON.  ``Trainer.run(resume_from=...)`` restores all
+    of it and continues bit-for-bit identical to an uninterrupted run
+    (test-enforced goldens)."""
+    from repro.checkpoint import save_checkpoint
+    meta = {
+        "loss": state.loss, "it": state.it, "source": state.source.name,
+        "engine_state": {
+            "format": 1,
+            "it": state.it,
+            "seed": state.plan.seed,
+            "source": state.source.name,
+            "source_state": state.source.state_dict(),
+            "history": state.history.to_dict(),
+        },
+    }
+    if final:
+        meta["final"] = True
+    return save_checkpoint(
+        state.plan.ckpt_dir, state.it,
+        {"params": state.params, "opt_state": state.opt_state},
+        meta, keep_last=state.plan.ckpt_keep_last or None)
+
+
 class CheckpointCallback(Callback):
-    """Periodic params checkpointing via ``repro.checkpoint`` (same
-    cadence semantics as launch/train.py's LM loop: skips step 0)."""
+    """Periodic TrainerState checkpointing via ``repro.checkpoint``
+    (same cadence semantics as launch/train.py's LM loop: skips step 0).
+    Each save is a full exact-resume snapshot — params AND opt_state,
+    source rng/stream position, History, iteration — not just params,
+    so a restored run is the run the convergence curves describe."""
 
     def on_step(self, state):
         every = state.plan.ckpt_every
         if every and state.it and state.it % every == 0:
-            from repro.checkpoint import save_checkpoint
-            save_checkpoint(state.plan.ckpt_dir, state.it, state.params,
-                            {"loss": state.loss, "it": state.it,
-                             "source": state.source.name})
+            save_trainer_state(state)
 
     def on_train_end(self, state):
         if state.plan.ckpt_every:
-            from repro.checkpoint import save_checkpoint
-            save_checkpoint(state.plan.ckpt_dir, state.it, state.params,
-                            {"loss": state.loss, "it": state.it,
-                             "source": state.source.name, "final": True})
+            save_trainer_state(state, final=True)
 
 
 def default_callbacks(plan: TrainPlan) -> List[Callback]:
@@ -1231,6 +1406,14 @@ class Trainer:
         self.callbacks = (list(callbacks) if callbacks is not None
                           else default_callbacks(plan))
         self.callbacks += list(extra_callbacks)
+        if plan.bad_steps.needs_ckpt() and not plan.ckpt_every:
+            raise ValueError(
+                "BadStepPolicy escalates to rollback but plan.ckpt_every "
+                "is 0 — there would never be a checkpoint to roll back "
+                "to; set ckpt_every (and ckpt_dir) or use "
+                "on_bad='skip'/'raise'")
+        self._consec_bad = 0             # consecutive guard-tripped steps
+        self._n_rollbacks = 0
         self.opt = plan.make_optimizer()
         self._scfg = _static_cfg(cfg)
         # evaluation + full-loss tracking reuse the source's ELL when it
@@ -1258,8 +1441,9 @@ class Trainer:
             def step(params, opt_state, batch):
                 loss, grads = jax.value_and_grad(
                     lambda p: src.loss(p, batch))(params)
-                params, opt_state = opt.update(grads, opt_state, params)
-                return params, opt_state, loss
+                params, opt_state, good = _guarded_update(
+                    opt, params, opt_state, loss, grads)
+                return params, opt_state, loss, good
 
             self._step = jax.jit(
                 step, donate_argnums=(0, 1) if plan.donate else ())
@@ -1295,9 +1479,14 @@ class Trainer:
     # ------------------------------------------------------------------
     def _consume(self, rec, state: TrainState) -> None:
         """Read one step record back to host and fire its callbacks."""
-        it, loss, val, fl, n_nodes, batch = rec
+        it, loss, val, fl, n_nodes, batch, good = rec
         state.it = it
         state.loss = float(loss)           # host sync: step finished
+        state.step_bad = not bool(good)
+        if state.step_bad:
+            self._consec_bad += 1
+        else:
+            self._consec_bad = 0
         state.val_acc = float(val) if val is not None else None
         state.full_loss = float(fl) if fl is not None else None
         state.n_nodes = n_nodes
@@ -1305,18 +1494,108 @@ class Trainer:
         self._fire("on_step", state)
         if state.val_acc is not None:
             self._fire("on_eval", state)
+        if state.step_bad:
+            self._apply_bad_step_policy(state)
 
-    def run(self) -> TrainResult:
+    def _apply_bad_step_policy(self, state: TrainState) -> None:
+        """A guard-tripped step reached the host: decide what to do.
+
+        The in-jaxpr guard already made the bad step an identity update,
+        so under ``skip`` there is nothing to undo — the next step (which
+        under ``deferred_sync`` has ALREADY dispatched from the kept
+        params) simply resamples.  ``rollback`` restores the latest
+        checkpoint once ``max_consecutive`` bad steps pile up."""
+        pol = self.plan.bad_steps
+        if pol.on_bad == "raise":
+            raise NonFiniteStepError(state.it, state.loss,
+                                     self._consec_bad)
+        if self._consec_bad < pol.max_consecutive:
+            return                         # plain skip-and-resample
+        escalation = (pol.escalate if pol.on_bad == "skip"
+                      else "rollback")
+        if escalation == "rollback":
+            state.rollback_pending = True
+            return
+        raise NonFiniteStepError(state.it, state.loss, self._consec_bad)
+
+    def _rollback(self, state: TrainState):
+        """Restore params/opt_state from the latest checkpoint after
+        ``max_consecutive`` bad steps (bounded by ``max_rollbacks``)."""
+        from repro.checkpoint import latest_step, restore_checkpoint
+        pol = self.plan.bad_steps
+        self._n_rollbacks += 1
+        if self._n_rollbacks > pol.max_rollbacks:
+            raise NonFiniteStepError(state.it, state.loss,
+                                     self._consec_bad)
+        step = latest_step(self.plan.ckpt_dir)
+        if step is None:
+            # bad steps piled up before the first checkpoint cadence —
+            # there is nothing to restore, surface the divergence
+            raise NonFiniteStepError(state.it, state.loss,
+                                     self._consec_bad)
+        warnings.warn(
+            f"rolling back to checkpoint step {step} after "
+            f"{self._consec_bad} consecutive non-finite steps "
+            f"(rollback {self._n_rollbacks}/{pol.max_rollbacks})",
+            RuntimeWarning, stacklevel=2)
+        tree = restore_checkpoint(
+            self.plan.ckpt_dir,
+            {"params": state.params, "opt_state": state.opt_state},
+            step=step)
+        self._consec_bad = 0
+        return (self.source.place(tree["params"]),
+                self.source.place(tree["opt_state"]))
+
+    def _restore_run_state(self, directory: str, params_like,
+                           opt_like):
+        """Load the latest TrainerState checkpoint for exact resume."""
+        from repro.checkpoint import (latest_step, load_metadata,
+                                      restore_checkpoint)
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"resume_from={directory!r}: no completed checkpoints")
+        meta = load_metadata(directory, step) or {}
+        es = meta.get("engine_state")
+        if not es:
+            raise ValueError(
+                f"checkpoint step {step} in {directory!r} has no "
+                f"engine_state — it was not written by the engine's "
+                f"CheckpointCallback (params-only checkpoints cannot "
+                f"be resumed exactly)")
+        if es.get("seed") != self.plan.seed:
+            warnings.warn(
+                f"resuming a run recorded with seed={es.get('seed')} "
+                f"under plan.seed={self.plan.seed}; the continued "
+                f"batch stream follows the CHECKPOINT's stream state, "
+                f"not the new seed", RuntimeWarning, stacklevel=2)
+        tree = restore_checkpoint(
+            directory, {"params": params_like, "opt_state": opt_like},
+            step=step)
+        self.source.load_state_dict(es.get("source_state", {}))
+        history = History.from_dict(es.get("history", {}))
+        return (self.source.place(tree["params"]),
+                self.source.place(tree["opt_state"]),
+                int(es["it"]) + 1, history)
+
+    def run(self, resume_from: Optional[str] = None) -> TrainResult:
         graph, cfg, plan = self.graph, self.cfg, self.plan
         key = jax.random.key(plan.seed)
         params = self.source.place(G.init_gnn(key, cfg,
                                               graph.feats.shape[1]))
         opt_state = self.source.place(self.opt.init(params))
+        history, start_it = History(), 0
+        if resume_from is not None:
+            params, opt_state, start_it, history = \
+                self._restore_run_state(resume_from, params, opt_state)
 
         state = TrainState(graph=graph, cfg=cfg, plan=plan,
-                           source=self.source, history=History(),
+                           source=self.source, history=history,
                            params=params, opt_state=opt_state,
+                           it=start_it - 1,     # last completed iteration
                            full_loss_fn=self._full_loss_dev)
+        if history.losses:
+            state.loss = history.losses[-1]
         self._fire("on_train_start", state)
         deferred = _deferred_mode(plan)
         track = plan.track_full_loss_every
@@ -1325,7 +1604,7 @@ class Trainer:
         try:
             val_sel = self.source.node_split("val")
             stream = self.source.batches()
-            for it in range(plan.n_iters):
+            for it in range(start_it, plan.n_iters):
                 batch, n_nodes = next(stream)
                 # tracing happens on the first call; the donated batch
                 # pytree has no batch-shaped output to alias into, so
@@ -1333,20 +1612,20 @@ class Trainer:
                 # ONLY around the tracing call so real params/opt_state
                 # donation misses stay visible
                 with contextlib.ExitStack() as stack:
-                    if it == 0:
+                    if it == start_it:
                         stack.enter_context(warnings.catch_warnings())
                         warnings.filterwarnings(
                             "ignore",
                             message="Some donated buffers were not usable")
-                    params, opt_state, loss = self._step(params,
-                                                         opt_state, batch)
+                    params, opt_state, loss, good = self._step(
+                        params, opt_state, batch)
                 # eval / tracked full loss are DISPATCHED here (device
                 # scalars); the floats are read in _consume
                 val = (self._eval_dev(params, val_sel)
                        if it % plan.eval_every == 0 else None)
                 fl = (self._full_loss_dev(params)
                       if track_full and it % track == 0 else None)
-                rec = (it, loss, val, fl, n_nodes, batch)
+                rec = (it, loss, val, fl, n_nodes, batch, good)
                 state.params, state.opt_state = params, opt_state
                 if deferred:
                     # lagged sync: read record i-1 while step i flies
@@ -1355,6 +1634,13 @@ class Trainer:
                         self._consume(prev, state)
                 else:
                     self._consume(rec, state)
+                if state.rollback_pending:
+                    # rollback policies require ckpt_every>0, which
+                    # forces sync mode — params here are the guard-kept
+                    # (pre-divergence) values being replaced
+                    params, opt_state = self._rollback(state)
+                    state.params, state.opt_state = params, opt_state
+                    state.rollback_pending = False
                 if state.stop:
                     break
             if pending is not None:

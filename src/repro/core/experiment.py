@@ -23,9 +23,11 @@ import dataclasses
 import itertools
 import json
 import os
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import GNNConfig
+from repro.core import faults
 from repro.core.engine import (BatchSource, Callback, ClusterSource,
                                FullGraphSource, ImportanceSampledSource,
                                SampledSource, ShardedFullGraphSource,
@@ -155,8 +157,54 @@ def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
 
 
 # ---------------------------------------------------------------------------
-# (b, β) sweep
+# (b, β) sweep — crash-safe via a JSONL completion journal
 # ---------------------------------------------------------------------------
+
+def _point_key(paradigm: str, b: Optional[int],
+               fo: Optional[Tuple[int, ...]], seed: int) -> str:
+    """Stable journal identity of one grid point."""
+    fos = "x".join(map(str, fo)) if fo else "-"
+    return f"{paradigm}|{b if b is not None else '-'}|{fos}|{seed}"
+
+
+def _load_journal(path: Optional[str]) -> Dict[str, Dict]:
+    """Completed rows keyed by point, from a previous (crashed) sweep.
+    Only ``status == "ok"`` records count as done — error rows are
+    RETRIED on resume.  A torn final line (crash mid-append) is skipped,
+    not fatal: its point simply reruns."""
+    done: Dict[str, Dict] = {}
+    if not path or not os.path.exists(path):
+        return done
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if rec.get("status") == "ok" and "key" in rec:
+                done[rec["key"]] = rec.get("row", {})
+    return done
+
+
+def _append_journal(path: str, rec: Dict) -> None:
+    """Durable append: one JSON line, flushed + fsynced before the sweep
+    moves on, so a kill after this point cannot lose the record."""
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _is_pallas_failure(e: BaseException) -> bool:
+    """Does this look like the Pallas/Mosaic aggregation kernel failing
+    to lower on this backend (as opposed to a training bug)?"""
+    s = f"{type(e).__name__}: {e}"
+    return any(m in s for m in ("Mosaic", "mosaic", "Pallas", "pallas",
+                                "Triton", "triton"))
+
 
 def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
           batch_sizes: Sequence[int] = (),
@@ -164,7 +212,8 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
           include_fullgraph: bool = False,
           sources: Sequence[str] = ("minibatch",),
           seeds: Sequence[int] = (0,),
-          verbose: bool = False) -> List[Dict]:
+          verbose: bool = False,
+          journal: Optional[str] = None) -> List[Dict]:
     """Run the (b, β, sampler) product grid — the paper's §5 plane plus
     a sampler axis over the mini-batch families (``sources`` names from
     ``PARADIGMS``: minibatch, minibatch_sharded, cluster, importance;
@@ -175,6 +224,18 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
     broadcast to all ``cfg.n_layers`` hops).  Each grid point gets a cfg
     copy with that (b, β) so ``GNNConfig.validate()`` rejects bad grids
     before any sampling or kernel work starts.
+
+    ``journal`` makes the sweep CRASH-SAFE (docs/training_api.md "Fault
+    tolerance"): every completed point is appended to the JSONL file
+    (flushed + fsynced) before the next one starts, rerunning with the
+    same path skips points already recorded ``ok`` (their journaled rows
+    are returned in grid order), and a per-point failure becomes an
+    ``status="error"`` row instead of killing the remaining grid
+    (error points are retried on resume).  Independently of the journal,
+    a point whose Pallas aggregation kernel fails to lower is retried
+    once with ``use_agg_kernel=False`` (loud RuntimeWarning; the row
+    carries ``agg_kernel_degraded=True``) so one backend quirk does not
+    sink a long sweep.
     """
     points: List[Tuple[str, Optional[int], Optional[Tuple[int, ...]]]] = []
     seen = set()
@@ -202,9 +263,17 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                 continue
             seen.add((src, int(b)))
         points.append((src, int(b), fo))
+    done = _load_journal(journal)
     rows: List[Dict] = []
     for paradigm, b, fo in points:
         for seed in seeds:
+            key = _point_key(paradigm, b, fo, seed)
+            if key in done:
+                rows.append(done[key])
+                if verbose:
+                    print(f"journal: skipping completed point {key}",
+                          flush=True)
+                continue
             plan_pt = dataclasses.replace(plan, seed=seed)
             if plan.ckpt_every:
                 # namespace checkpoints per grid point/seed so runs don't
@@ -218,12 +287,56 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                                                    f"{tag}_s{seed}"))
             # run_experiment owns the effective-(b, fanouts) validation
             # and fails fast on bad grid points (satellite)
-            row = run_experiment(graph, cfg, plan_pt, paradigm=paradigm,
-                                 b=b, fanouts=fo)
+            try:
+                try:
+                    row = run_experiment(graph, cfg, plan_pt,
+                                         paradigm=paradigm, b=b,
+                                         fanouts=fo)
+                except Exception as e:
+                    if not (cfg.use_agg_kernel and _is_pallas_failure(e)):
+                        raise
+                    warnings.warn(
+                        f"Pallas aggregation kernel failed to lower for "
+                        f"point {key} ({type(e).__name__}: {e}) — "
+                        f"DEGRADING to the einsum path for this point "
+                        f"(use_agg_kernel=False); throughput rows from "
+                        f"it are NOT kernel-path numbers",
+                        RuntimeWarning, stacklevel=2)
+                    row = run_experiment(
+                        graph,
+                        dataclasses.replace(cfg, use_agg_kernel=False),
+                        plan_pt, paradigm=paradigm, b=b, fanouts=fo)
+                    row["agg_kernel_degraded"] = True
+            except Exception as e:
+                # without a journal this sweep is interactive: fail fast.
+                # With one it is a long unattended grid: isolate the
+                # point, record it, keep going (retried on resume).
+                if journal is None:
+                    raise
+                row = {"paradigm": paradigm, "b": b,
+                       "fanouts": "x".join(map(str, fo)) if fo else "",
+                       "seed": seed, "status": "error",
+                       "error": f"{type(e).__name__}: {e}"}
+                _append_journal(journal, {"key": key, "status": "error",
+                                          "error": row["error"]})
+                rows.append(row)
+                if verbose:
+                    print(f"point {key} FAILED: {row['error']}",
+                          flush=True)
+                continue
+            if journal is not None:
+                _append_journal(journal, {
+                    "key": key, "status": "ok",
+                    "row": {k: v for k, v in row.items()
+                            if not k.startswith("_")}})
+                done[key] = row
             rows.append(row)
             if verbose:
-                print(",".join(f"{k}={v}" for k, v in row.items()),
-                      flush=True)
+                print(",".join(f"{k}={v}" for k, v in row.items()
+                               if not k.startswith("_")), flush=True)
+            # chaos-test crash site: a kill here (point finished AND
+            # journaled) must lose no work on resume
+            faults.maybe_crash("sweep.after_point")
     return rows
 
 
@@ -274,6 +387,10 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
                     help="run every grid point through the Pallas "
                          "aggregation kernel (interpret mode — works on "
                          "CPU and on multi-device meshes via shard_map)")
+    ap.add_argument("--journal", default=None,
+                    help="JSONL completion journal: crash-safe sweeps "
+                         "— rerunning with the same path skips points "
+                         "already recorded ok")
     ap.add_argument("--out", default="sweep_smoke")
     args = ap.parse_args(argv)
 
@@ -289,7 +406,7 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
           else tuple(args.fanout))
     rows = sweep(graph, cfg, plan, batch_sizes=args.bs, fanout_grid=[fo],
                  include_fullgraph=args.fullgraph, sources=args.sources,
-                 verbose=True)
+                 verbose=True, journal=args.journal)
     paths = save_rows(args.out, rows)
     print(json.dumps({"rows": len(rows), **paths}))
     return rows

@@ -18,10 +18,31 @@ class History:
     val_acc_iters: List[int] = dataclasses.field(default_factory=list)
     times: List[float] = dataclasses.field(default_factory=list)
     nodes_processed: List[int] = dataclasses.field(default_factory=list)
+    #: 1-based iterations whose step produced a non-finite loss/grad and
+    #: was skipped/rolled back by the engine's BadStepPolicy
+    bad_steps: List[int] = dataclasses.field(default_factory=list)
     _t0: Optional[float] = None
 
     def start(self):
         self._t0 = time.perf_counter()
+
+    # -- checkpoint serialization (engine exact-resume) ----------------
+    def to_dict(self) -> dict:
+        """JSON-serializable snapshot.  Python floats round-trip exactly
+        through ``json`` (repr-based), so a resumed run's restored
+        History compares bit-for-bit with the uninterrupted one —
+        except ``times``, which restart from the resume wall-clock."""
+        return {f.name: list(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if not f.name.startswith("_")}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "History":
+        h = cls()
+        for f in dataclasses.fields(cls):
+            if not f.name.startswith("_") and f.name in d:
+                setattr(h, f.name, list(d[f.name]))
+        return h
 
     def record(self, loss: float, val_acc: Optional[float] = None,
                nodes: int = 0):

@@ -1,4 +1,4 @@
-"""Async mini-batch prefetch pipeline (DGL-dataloader style).
+"""Async mini-batch prefetch pipeline (DGL-dataloader style), supervised.
 
 The paper attributes the mini-batch paradigm's per-iteration overhead to
 CPU-side sampling + feature loading (§5 throughput analysis).  Overlapping
@@ -9,20 +9,44 @@ queue while the accelerator consumes the previous batch.
 Batches are produced by ONE thread from ONE rng, in order, so a run with
 `Prefetcher` consumes the identical batch sequence as the synchronous
 sample-in-the-loop path with the same seed.
+
+Fault tolerance (docs/training_api.md "Fault tolerance"):
+
+- worker errors are CLASSIFIED: exception types in ``transient`` (by
+  default ``faults.TransientSamplerFault`` plus ``MemoryError``) get the
+  worker restarted with bounded exponential backoff — the rng is rewound
+  to the snapshot taken before the failed draw, so the replacement
+  worker REPLAYS the same batch and the consumed sequence is identical
+  to a fault-free run (test-enforced).  Anything else is FATAL: stored
+  and re-raised from ``next()``.
+- ``next()`` after the end-of-stream sentinel (or a fatal error) has
+  been consumed re-raises ``StopIteration`` / the stored error
+  IMMEDIATELY instead of blocking forever on the drained queue (the
+  pre-PR-6 deadlock).
+- every delivered batch carries the rng state captured AFTER its draw
+  (``last_rng_state``), and a Prefetcher can be constructed from such a
+  state (``rng_state=``) — the exact-resume hook: a restored run's
+  batch stream continues bit-for-bit where the checkpoint left off.
 """
 from __future__ import annotations
 
 import queue
 import sys
 import threading
+import time
 import traceback
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.graph import Graph
 from repro.core.sampler import FanoutBatch, gather_features, sample_batch
+
+#: worker exceptions restarted-with-backoff instead of surfaced
+DEFAULT_TRANSIENT: Tuple[Type[BaseException], ...] = (
+    faults.TransientSamplerFault, MemoryError)
 
 
 class HostStagingRing:
@@ -83,7 +107,7 @@ class HostStagingRing:
 
 
 class Prefetcher:
-    """Double-buffered background sampler + feature gather.
+    """Supervised double-buffered background sampler + feature gather.
 
     Yields (FanoutBatch, payload) tuples, where payload is the gathered
     hop features by default; `payload_fn(graph, fb)` overrides the
@@ -95,6 +119,14 @@ class Prefetcher:
     keep the one-thread/one-rng ordering guarantee.  `depth` is the
     queue bound (2 = classic double buffering: one batch in flight on
     the host while the device consumes the other).
+
+    `max_restarts` bounds how many transient worker deaths are absorbed
+    (each restart replays the failed batch from the pre-draw rng
+    snapshot after an exponential-backoff pause of
+    ``backoff * 2**attempt``, capped at ``backoff_cap`` seconds);
+    `transient` is the tuple of exception types classified transient.
+    `rng_state` (a ``numpy`` bit-generator state dict, as exposed by
+    `last_rng_state`) resumes the batch stream mid-sequence.
     """
 
     _SENTINEL = object()
@@ -102,57 +134,124 @@ class Prefetcher:
     def __init__(self, graph: Graph, batch_size: int,
                  fanouts: Sequence[int], seed: int = 0, depth: int = 2,
                  n_batches: Optional[int] = None,
-                 payload_fn=None, sample_fn=None):
+                 payload_fn=None, sample_fn=None,
+                 max_restarts: int = 3,
+                 backoff: float = 0.05, backoff_cap: float = 2.0,
+                 transient: Tuple[Type[BaseException], ...]
+                 = DEFAULT_TRANSIENT,
+                 rng_state: Optional[dict] = None):
         self.graph = graph
         self.batch_size = batch_size
         self.fanouts = tuple(fanouts)
         self.n_batches = n_batches
         self.payload_fn = payload_fn or gather_features
         self.sample_fn = sample_fn or sample_batch
+        self.max_restarts = max_restarts
+        self.backoff = backoff
+        self.backoff_cap = backoff_cap
+        self.transient = tuple(transient)
         self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
         self._rng = np.random.default_rng(seed)
+        if rng_state is not None:
+            self._rng.bit_generator.state = rng_state
+        #: rng state after the draw of the most recently DELIVERED batch
+        #: (feed back in as ``rng_state=`` to resume the sequence there)
+        self.last_rng_state: Optional[dict] = rng_state
+        #: completed transient restarts so far
+        self.restarts = 0
+        self._produced = 0               # survives worker restarts
+        self._finished = False           # end-of-stream sentinel consumed
+        self._pre_draw_state: Optional[dict] = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     # ------------------------------------------------------------------
-    def _worker(self):
-        produced = 0
-        try:
+    def _produce_loop(self):
+        while not self._stop.is_set():
+            if self.n_batches is not None \
+                    and self._produced >= self.n_batches:
+                return
+            # snapshot BEFORE the draw: a transient failure anywhere in
+            # sample/payload rewinds here, so the restarted worker
+            # replays this very batch and ordering is preserved
+            self._pre_draw_state = self._rng.bit_generator.state
+            fb = self.sample_fn(self._rng, self.graph,
+                                self.batch_size, self.fanouts)
+            payload = self.payload_fn(self.graph, fb)
+            post_state = self._rng.bit_generator.state
+            # blocking put with timeout so close() can interrupt
             while not self._stop.is_set():
-                if self.n_batches is not None and produced >= self.n_batches:
-                    break
-                fb = self.sample_fn(self._rng, self.graph,
-                                    self.batch_size, self.fanouts)
-                feats = self.payload_fn(self.graph, fb)
-                # blocking put with timeout so close() can interrupt
-                while not self._stop.is_set():
-                    try:
-                        self._q.put((fb, feats), timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-                produced += 1
-        except BaseException as e:           # surfaced on next()
-            self._err = e
-        finally:
-            while True:
                 try:
-                    self._q.put(self._SENTINEL, timeout=0.1)
+                    self._q.put((fb, payload, post_state), timeout=0.1)
                     break
                 except queue.Full:
-                    if self._stop.is_set():
-                        break
+                    continue
+            else:
+                return
+            self._produced += 1
+
+    def _worker(self):
+        try:
+            self._produce_loop()
+        except self.transient as e:
+            if self.restarts < self.max_restarts \
+                    and not self._stop.is_set():
+                self.restarts += 1
+                delay = min(self.backoff * (2 ** (self.restarts - 1)),
+                            self.backoff_cap)
+                warnings.warn(
+                    f"Prefetcher worker hit transient "
+                    f"{type(e).__name__}: {e} — restart "
+                    f"{self.restarts}/{self.max_restarts} in "
+                    f"{delay:.2f}s (batch {self._produced} will be "
+                    f"replayed)", RuntimeWarning, stacklevel=2)
+                if self._stop.wait(delay):      # closed during backoff
+                    self._put_sentinel()
+                    return
+                if self._pre_draw_state is not None:
+                    self._rng.bit_generator.state = self._pre_draw_state
+                t = threading.Thread(target=self._worker, daemon=True)
+                self._thread = t
+                t.start()
+                return                           # old thread retires
+            # restart budget exhausted: escalate to fatal
+            self._err = e
+            self._put_sentinel()
+        except BaseException as e:               # fatal: surfaced on next()
+            self._err = e
+            self._put_sentinel()
+        else:
+            self._put_sentinel()
+
+    def _put_sentinel(self):
+        while True:
+            try:
+                self._q.put(self._SENTINEL, timeout=0.1)
+                break
+            except queue.Full:
+                if self._stop.is_set():
+                    break
 
     # ------------------------------------------------------------------
     def next(self) -> Tuple[FanoutBatch, List[np.ndarray]]:
-        item = self._q.get()
-        if item is self._SENTINEL:
+        if self._finished:
+            # post-sentinel calls re-raise IMMEDIATELY (the stored fatal
+            # error, or StopIteration) instead of blocking forever on
+            # the drained queue
             if self._err is not None:
                 raise self._err
             raise StopIteration
-        return item
+        item = self._q.get()
+        if item is self._SENTINEL:
+            self._finished = True
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        fb, payload, post_state = item
+        self.last_rng_state = post_state
+        return fb, payload
 
     def __iter__(self):
         while True:

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -68,7 +69,8 @@ def train_lm(args) -> dict:
                       flush=True)
             if args.ckpt_every and it and it % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt_dir, it, params,
-                                {"arch": args.arch, "loss": loss})
+                                {"arch": args.arch, "loss": loss},
+                                keep_last=args.keep_last or None)
     result = {"arch": args.arch, "first_loss": losses[0],
               "final_loss": losses[-1], "steps": len(losses)}
     print(json.dumps(result))
@@ -89,7 +91,8 @@ def train_gnn(args) -> dict:
                                "feat_dim": graph.feats.shape[1]})
     plan = TrainPlan(lr=args.lr, n_iters=args.steps, seed=args.seed,
                      eval_every=args.log_every,
-                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                     ckpt_keep_last=args.keep_last)
     if args.sweep_bs or args.sweep_fanout:
         # each --sweep-fanout value is ONE grid point, broadcast to all
         # hops by sweep() (so `--sweep-fanout 5 10 15` sweeps β)
@@ -97,13 +100,26 @@ def train_gnn(args) -> dict:
                      batch_sizes=args.sweep_bs or [cfg_run.batch_size],
                      fanout_grid=[int(f) for f in args.sweep_fanout]
                      if args.sweep_fanout else [cfg_run.fanout],
-                     include_fullgraph=True, verbose=True)
+                     include_fullgraph=True, verbose=True,
+                     journal=args.journal)
         paths = save_rows(f"{args.arch}_sweep", rows)
         result = {"arch": args.arch, "sweep_rows": len(rows), **paths}
         print(json.dumps(result, indent=2))
         return result
-    rf = Trainer(graph, cfg_run, plan, source=FullGraphSource()).run()
-    rm = Trainer(graph, cfg_run, plan, source=SampledSource()).run()
+    # the two paradigm Trainers share plan.ckpt_dir: namespace their
+    # checkpoints (and any --resume) per paradigm so the manifests don't
+    # clobber each other
+    def _plan_for(tag):
+        return (plan if not (plan.ckpt_every or args.resume) else
+                plan.__class__(**{**plan.__dict__,
+                                  "ckpt_dir": os.path.join(plan.ckpt_dir,
+                                                           tag)}))
+
+    pf, pm = _plan_for("fullgraph"), _plan_for("minibatch")
+    rf = Trainer(graph, cfg_run, pf, source=FullGraphSource()).run(
+        resume_from=pf.ckpt_dir if args.resume else None)
+    rm = Trainer(graph, cfg_run, pm, source=SampledSource()).run(
+        resume_from=pm.ckpt_dir if args.resume else None)
     result = {
         "arch": args.arch, "preset": args.preset,
         "full_graph": {"final_loss": rf.history.losses[-1],
@@ -135,6 +151,17 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="experiments/ckpt")
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="checkpoint retention: keep only the newest K "
+                         "steps (0 = keep all)")
+    ap.add_argument("--resume", action="store_true",
+                    help="GNN only: resume each paradigm from the "
+                         "latest checkpoint under its --ckpt-dir "
+                         "namespace (exact resume — continues the "
+                         "interrupted run bit-for-bit)")
+    ap.add_argument("--journal", default=None,
+                    help="GNN sweeps: JSONL completion journal for "
+                         "crash-safe resume (see core.experiment.sweep)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -1,0 +1,189 @@
+"""Crash-safe checkpoint layer: manifest + checksums, atomic write
+ordering (kill at any failpoint leaves the directory restorable at the
+previous step), retention, stale-tmp GC, and the typed restore errors."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, CheckpointDtypeError,
+                              CheckpointKeyError, CheckpointShapeError,
+                              available_steps, latest_step, load_metadata,
+                              restore_checkpoint, save_checkpoint)
+from repro.checkpoint.ckpt import MANIFEST
+from repro.core import faults
+
+
+def _tree(seed=0, shape=(4, 3)):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=shape[1:]).astype(np.float32))}
+
+
+@pytest.fixture(autouse=True)
+def _no_armed_failpoints():
+    yield
+    faults.disarm()
+
+
+# ---------------------------------------------------------------------------
+# Manifest + checksums
+# ---------------------------------------------------------------------------
+
+def test_manifest_records_completed_steps(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2, 5):
+        save_checkpoint(d, step, _tree(step), {"step": step})
+    assert available_steps(d) == [1, 2, 5]
+    assert latest_step(d) == 5
+    m = json.load(open(os.path.join(d, MANIFEST)))
+    assert sorted(m["steps"]) == ["1", "2", "5"]
+    for entry in m["steps"].values():
+        assert len(entry["sha256"]) == 64 and entry["has_meta"]
+    assert load_metadata(d) == {"step": 5}
+    assert load_metadata(d, 1) == {"step": 1}
+
+
+def test_restore_verifies_checksum(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    save_checkpoint(d, 1, t)
+    path = os.path.join(d, "ckpt_00000001.npz")
+    with open(path, "r+b") as f:        # flip one byte -> corrupt
+        f.seek(20)
+        b = f.read(1)
+        f.seek(20)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        restore_checkpoint(d, t)
+
+
+def test_latest_step_ignores_orphan_npz(tmp_path):
+    """An npz not recorded by the manifest (crash between rename and
+    manifest write) is invisible to readers."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    np.savez(os.path.join(d, "ckpt_00000009.npz"), junk=np.zeros(3))
+    assert latest_step(d) == 1
+
+
+def test_adopts_pre_manifest_directory(tmp_path):
+    """Old-format directories (no MANIFEST.json) keep working and are
+    adopted into the manifest by the next save."""
+    d = str(tmp_path)
+    t = _tree()
+    save_checkpoint(d, 1, t)
+    os.unlink(os.path.join(d, MANIFEST))
+    assert latest_step(d) == 1                 # scan fallback
+    out = restore_checkpoint(d, t)             # no recorded sha: no verify
+    np.testing.assert_array_equal(out["w"], np.asarray(t["w"]))
+    save_checkpoint(d, 2, _tree(2))
+    assert available_steps(d) == [1, 2]        # step 1 adopted, not hidden
+
+
+# ---------------------------------------------------------------------------
+# Typed restore errors
+# ---------------------------------------------------------------------------
+
+def test_restore_key_mismatch_names_leaves(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    with pytest.raises(CheckpointKeyError) as ei:
+        restore_checkpoint(d, {"w": _tree()["w"], "extra": jnp.zeros(2)})
+    assert "extra" in str(ei.value) and "b" in str(ei.value)
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    bad = _tree()
+    bad["w"] = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(CheckpointShapeError, match="'w'"):
+        restore_checkpoint(d, bad)
+
+
+def test_restore_dtype_mismatch_names_leaf(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    bad = _tree()
+    # numpy like-leaf: jnp would silently downcast to f32 without x64
+    bad["b"] = np.zeros(bad["b"].shape, np.float64)
+    with pytest.raises(CheckpointDtypeError, match="'b'"):
+        restore_checkpoint(d, bad)
+
+
+# ---------------------------------------------------------------------------
+# Retention + tmp GC
+# ---------------------------------------------------------------------------
+
+def test_keep_last_retention(tmp_path):
+    d = str(tmp_path)
+    for step in range(1, 6):
+        save_checkpoint(d, step, _tree(step), {"s": step}, keep_last=2)
+    assert available_steps(d) == [4, 5]
+    files = sorted(os.listdir(d))
+    assert "ckpt_00000004.npz" in files and "ckpt_00000005.npz" in files
+    assert not any(f.startswith(("ckpt_00000001", "meta_00000001",
+                                 "ckpt_00000002", "ckpt_00000003"))
+                   for f in files)
+    # retained steps still restore + verify
+    out = restore_checkpoint(d, _tree(), step=4)
+    np.testing.assert_array_equal(out["w"], np.asarray(_tree(4)["w"]))
+
+
+def test_stale_tmp_gc(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(d, exist_ok=True)
+    stale = os.path.join(d, "deadbeef.tmp")
+    open(stale, "w").write("leftover")
+    save_checkpoint(d, 1, _tree())
+    assert not os.path.exists(stale)
+
+
+# ---------------------------------------------------------------------------
+# Crash failpoints: kill at every stage, directory stays consistent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("site", ["ckpt.before_npz_rename",
+                                  "ckpt.after_npz_rename",
+                                  "ckpt.after_meta"])
+def test_kill_mid_save_restorable_at_previous_step(tmp_path, site):
+    d = str(tmp_path)
+    t1, t2 = _tree(1), _tree(2)
+    save_checkpoint(d, 1, t1, {"s": 1})
+    with faults.armed(site):
+        with pytest.raises(faults.SimulatedCrash):
+            save_checkpoint(d, 2, t2, {"s": 2})
+    # the interrupted step never became visible ...
+    assert latest_step(d) == 1
+    out = restore_checkpoint(d, t1)
+    np.testing.assert_array_equal(out["w"], np.asarray(t1["w"]))
+    assert load_metadata(d) == {"s": 1}
+    # ... and a retried save completes normally (GCing any stale tmp)
+    save_checkpoint(d, 2, t2, {"s": 2})
+    assert latest_step(d) == 2
+    assert not any(f.endswith(".tmp") for f in os.listdir(d))
+
+
+def test_kill_before_rename_leaves_tmp_for_gc(tmp_path):
+    """SimulatedCrash is a BaseException: the save's `except Exception`
+    cleanup must NOT swallow it (that would be unlike real process
+    death) — the tmp file survives until the next save GCs it."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    with faults.armed("ckpt.before_npz_rename"):
+        with pytest.raises(faults.SimulatedCrash):
+            save_checkpoint(d, 2, _tree(2))
+    assert any(f.endswith(".tmp") for f in os.listdir(d))
+    save_checkpoint(d, 2, _tree(2))
+    assert not any(f.endswith(".tmp") for f in os.listdir(d))
+
+
+def test_corrupt_manifest_is_loud(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    open(os.path.join(d, MANIFEST), "w").write("{not json")
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        latest_step(d)

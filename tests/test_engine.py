@@ -214,16 +214,24 @@ def test_early_stop_records_crossing_iteration(small_graph):
 
 
 def test_checkpoint_callback(small_graph, tmp_path):
-    from repro.checkpoint import latest_step, restore_checkpoint
+    from repro.checkpoint import (latest_step, load_metadata,
+                                  restore_checkpoint)
     g = small_graph
     plan = TrainPlan(lr=0.3, n_iters=7, ckpt_every=3, seed=0,
                      ckpt_dir=str(tmp_path))
-    res = Trainer(g, _cfg(g), plan, source=FullGraphSource()).run()
+    tr = Trainer(g, _cfg(g), plan, source=FullGraphSource())
+    res = tr.run()
     # periodic saves at 3, 6 + final save at last iter
     assert latest_step(str(tmp_path)) == 6
-    restored = restore_checkpoint(str(tmp_path), res.params)
+    # checkpoints are full TrainerState snapshots: params AND opt_state
+    # in the npz, the resume engine_state in the metadata
+    like = {"params": res.params, "opt_state": tr.opt.init(res.params)}
+    restored = restore_checkpoint(str(tmp_path), like)
     np.testing.assert_array_equal(np.asarray(res.params[0]["w_self"]),
-                                  restored[0]["w_self"])
+                                  restored["params"][0]["w_self"])
+    es = load_metadata(str(tmp_path))["engine_state"]
+    assert es["it"] == 6 and es["seed"] == 0
+    assert len(es["history"]["losses"]) == 7
 
 
 # ---------------------------------------------------------------------------

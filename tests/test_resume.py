@@ -1,0 +1,117 @@
+"""Exact resume: `Trainer.run(resume_from=...)` must continue a
+checkpointed run bit-for-bit identical to the uninterrupted fixed-seed
+run — History, params, final test accuracy — for full-graph GD and for
+the prefetched sampled stream (whose rng state rides the checkpoint)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, save_checkpoint
+from repro.configs.base import GNNConfig
+from repro.core.engine import (ClusterSource, FullGraphSource,
+                               SampledSource, Trainer, TrainPlan)
+
+
+def _cfg(g, **kw):
+    base = dict(name="resume", model="graphsage", n_nodes=g.n,
+                feat_dim=g.feats.shape[1], hidden=16,
+                n_classes=g.n_classes, n_layers=2, fanout=(4, 3),
+                batch_size=32, loss="ce")
+    base.update(kw)
+    return GNNConfig(**base)
+
+
+def _params_equal(a, b):
+    return all(bool(jnp.array_equal(x, y)) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _assert_same_run(golden, resumed):
+    assert resumed.history.losses == golden.history.losses
+    assert resumed.history.val_accs == golden.history.val_accs
+    assert resumed.history.val_acc_iters == golden.history.val_acc_iters
+    assert resumed.history.full_losses == golden.history.full_losses
+    assert (resumed.history.full_loss_iters
+            == golden.history.full_loss_iters)
+    assert (resumed.history.nodes_processed
+            == golden.history.nodes_processed)
+    assert _params_equal(resumed.params, golden.params)
+    assert resumed.final_test_acc == golden.final_test_acc
+
+
+@pytest.mark.parametrize("src_cls", [FullGraphSource, SampledSource,
+                                     ClusterSource],
+                         ids=["fullgraph", "sampled", "cluster"])
+def test_resume_equals_uninterrupted_golden(small_graph, tmp_path,
+                                            src_cls):
+    g, cfg = small_graph, _cfg(small_graph)
+    plan = TrainPlan(lr=0.3, n_iters=9, seed=0, eval_every=4,
+                     track_full_loss_every=3, ckpt_every=3,
+                     ckpt_dir=str(tmp_path / "golden"))
+    golden = Trainer(g, cfg, plan, source=src_cls()).run()
+
+    # interrupted run: stops after the it=3 checkpoint (n_iters=4 is a
+    # stand-in for a kill at it=4 — the final save lands at it=3)
+    d = str(tmp_path / "interrupted")
+    short = dataclasses.replace(plan, n_iters=4, ckpt_dir=d)
+    Trainer(g, cfg, short, source=src_cls()).run()
+    assert latest_step(d) == 3
+
+    full = dataclasses.replace(plan, ckpt_dir=d)
+    resumed = Trainer(g, cfg, full, source=src_cls()).run(resume_from=d)
+    _assert_same_run(golden, resumed)
+
+
+def test_resume_prefetch_off_matches_prefetch_on(small_graph, tmp_path):
+    """The sync sample-in-the-loop path checkpoints/resumes the same
+    stream state as the prefetched path."""
+    g, cfg = small_graph, _cfg(small_graph)
+    plan = TrainPlan(lr=0.3, n_iters=8, seed=0, eval_every=100,
+                     ckpt_every=3, ckpt_dir=str(tmp_path / "g"))
+    golden = Trainer(g, cfg, plan,
+                     source=SampledSource(prefetch=False)).run()
+    d = str(tmp_path / "i")
+    short = dataclasses.replace(plan, n_iters=4, ckpt_dir=d)
+    Trainer(g, cfg, short, source=SampledSource(prefetch=False)).run()
+    resumed = Trainer(g, cfg, dataclasses.replace(plan, ckpt_dir=d),
+                      source=SampledSource(prefetch=True)
+                      ).run(resume_from=d)
+    assert resumed.history.losses == golden.history.losses
+    assert _params_equal(resumed.params, golden.params)
+
+
+def test_resume_missing_directory_raises(small_graph, tmp_path):
+    g = small_graph
+    plan = TrainPlan(lr=0.3, n_iters=4, seed=0)
+    with pytest.raises(FileNotFoundError, match="no completed"):
+        Trainer(g, _cfg(g), plan, source=FullGraphSource()).run(
+            resume_from=str(tmp_path / "nope"))
+
+
+def test_resume_params_only_checkpoint_rejected(small_graph, tmp_path):
+    """Pre-fault-tolerance checkpoints (bare params, no engine_state)
+    cannot be resumed exactly — clear error, not silent divergence."""
+    g, cfg = small_graph, _cfg(small_graph)
+    d = str(tmp_path)
+    params = jax.tree.map(np.asarray, Trainer(
+        g, cfg, TrainPlan(lr=0.3, n_iters=1, seed=0),
+        source=FullGraphSource()).run().params)
+    save_checkpoint(d, 0, {"params": params, "opt_state": {}},
+                    {"loss": 1.0})
+    plan = TrainPlan(lr=0.3, n_iters=4, seed=0)
+    with pytest.raises(ValueError, match="engine_state"):
+        Trainer(g, cfg, plan, source=FullGraphSource()).run(
+            resume_from=d)
+
+
+def test_resume_seed_mismatch_warns(small_graph, tmp_path):
+    g, cfg = small_graph, _cfg(small_graph)
+    d = str(tmp_path)
+    plan = TrainPlan(lr=0.3, n_iters=4, seed=0, ckpt_every=3, ckpt_dir=d)
+    Trainer(g, cfg, plan, source=SampledSource()).run()
+    other = dataclasses.replace(plan, n_iters=6, seed=1)
+    with pytest.warns(RuntimeWarning, match="seed"):
+        Trainer(g, cfg, other, source=SampledSource()).run(resume_from=d)
