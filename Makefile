@@ -1,5 +1,5 @@
 .PHONY: check test bench-quick bench-engine bench-engine-baseline \
-	sweep-smoke chaos
+	sweep-smoke serve-smoke chaos
 
 check:
 	bash scripts/ci.sh
@@ -17,6 +17,12 @@ bench-engine:
 
 bench-engine-baseline:
 	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --devices 4
+
+serve-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --smoke --nodes 300 \
+	--chunk 64 --queries 32 --updates 4
+	PYTHONPATH=src python -m repro.launch.serve --smoke --kernel \
+	--nodes 200 --chunk 64 --queries 16 --updates 4
 
 chaos:
 	PYTHONPATH=src python -m pytest -x -q tests/test_chaos.py \

@@ -31,6 +31,10 @@ echo "== per scenario source: cluster / importance / minibatch_sharded, =="
 echo "== plus one sharded x Pallas-kernel point, interpret mode) =="
 make sweep-smoke
 
+echo "== serving smoke (layer-wise embedding build == naive forward, =="
+echo "== micro-batched queries, incremental refresh; einsum + kernel) =="
+make serve-smoke
+
 echo "== chaos suite (fault injection: worker death, NaN steps, =="
 echo "== kill-mid-checkpoint, sweep journal kill/resume) =="
 make chaos

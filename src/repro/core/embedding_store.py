@@ -1,0 +1,280 @@
+"""Cached per-layer embedding tables with graph-update dirty tracking.
+
+``EmbeddingStore`` materializes every layer's [n, d_l] table once (the
+layer-wise pass from ``core.inference``) and then keeps them fresh under
+point updates without full recomputes.  Invalidation follows the
+FORWARD influence cone: a change to node u's layer-(l-1) embedding can
+only move layer-l rows that aggregate u — u itself (self-loop) plus the
+rows whose ELL lists reference u (a reverse index built from the
+nonzero-weight ELL entries).  ``refresh()`` therefore re-embeds, per
+layer, ``dirty_rows ∪ changed ∪ referencing(changed)`` and carries that
+set forward as the next layer's ``changed`` — the k-hop frontier of the
+marked nodes, NOT the whole graph.  Re-embeds go through the same
+module-level compiled chunk step as the build pass (same chunk padding,
+same static config), so no new compilation is paid at update time.
+
+Two update channels (tests/test_embedding_store.py validates both
+against a from-scratch store on the updated graph):
+
+- ``update_features(nodes, feats)`` / ``mark_dirty(nodes)`` — layer-0
+  inputs changed; the ELL is untouched.
+- ``add_edges(src, dst)`` — structural: the CSR is rebuilt, and because
+  ã weights depend on BOTH endpoint degrees, the re-derived ELL rows are
+  the endpoints PLUS every current neighbor of an endpoint (their edge
+  weights to the endpoint changed).  Those rows are marked dirty at
+  every layer.
+
+``core.serving`` answers classification queries from the final-layer
+table via ``predict()`` (host-side argmax over a cached numpy copy —
+no per-query-shape retracing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.engine import _static_cfg
+from repro.core.graph import Graph, to_ell
+from repro.core.inference import (InferenceRun, _chunk_apply, _pre_source,
+                                  layerwise_layers)
+
+
+class EmbeddingStore:
+    """Per-layer embedding cache over a (mutable) graph.
+
+    ``max_deg=None`` keeps full neighborhoods (inference default);
+    ``mesh`` routes chunk aggregation through the NODES-sharded kernel
+    path (requires ``cfg.use_agg_kernel``)."""
+
+    def __init__(self, params, cfg: GNNConfig, graph: Graph, *,
+                 chunk_size: int = 1024, max_deg: Optional[int] = None,
+                 mesh=None, prefetch: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self._scfg = _static_cfg(cfg)
+        self.graph = graph
+        self.max_deg = max_deg
+        self.mesh = mesh
+        self.prefetch = prefetch
+        self.chunk_size = max(1, min(int(chunk_size), graph.n))
+        self.idx, self.w, self.w_self = to_ell(graph, max_deg=max_deg)
+        self.K = self.idx.shape[1]
+        self._h0 = jnp.asarray(graph.feats)
+        self.layers: Optional[List[jax.Array]] = None
+        self.build_stats: Optional[Dict] = None
+        self._dirty_in = np.zeros(graph.n, bool)    # layer-0 inputs moved
+        self._dirty_row = np.zeros(graph.n, bool)   # ELL row re-derived
+        self._rev = None                            # lazy reverse index
+        self._final_np: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # build
+    # ------------------------------------------------------------------
+    def build(self) -> InferenceRun:
+        """Full layer-wise pass; resets all dirty state."""
+        run = layerwise_layers(self.params, self.cfg, self._h0,
+                               (self.idx, self.w, self.w_self),
+                               chunk_size=self.chunk_size, mesh=self.mesh,
+                               prefetch=self.prefetch)
+        self.layers = list(run.layers)
+        self.build_stats = run.stats
+        self._dirty_in[:] = False
+        self._dirty_row[:] = False
+        self._final_np = None
+        return run
+
+    # ------------------------------------------------------------------
+    # dirty tracking
+    # ------------------------------------------------------------------
+    @property
+    def dirty(self) -> bool:
+        return (self.layers is None or bool(self._dirty_in.any())
+                or bool(self._dirty_row.any()))
+
+    def mark_dirty(self, nodes) -> None:
+        """Mark nodes whose layer-0 INPUT changed (features already
+        written to ``graph.feats``, or changed in place)."""
+        self._dirty_in[np.asarray(nodes, np.int64)] = True
+
+    def update_features(self, nodes, feats) -> None:
+        """Write new feature rows and mark them dirty."""
+        nodes = np.asarray(nodes, np.int64)
+        self.graph.feats[nodes] = np.asarray(feats, self.graph.feats.dtype)
+        self.mark_dirty(nodes)
+
+    def add_edges(self, src: Sequence[int], dst: Sequence[int]) -> None:
+        """Add undirected edges (u, v); duplicates and self-loops are
+        dropped.  Rebuilds the CSR, re-derives the ELL rows whose
+        weights moved (endpoints + every neighbor of an endpoint, since
+        ã depends on both endpoint degrees) and marks them dirty."""
+        g = self.graph
+        src = np.asarray(src, np.int64).ravel()
+        dst = np.asarray(dst, np.int64).ravel()
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if src.size == 0:
+            return
+        old_a = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+        old_b = g.indices.astype(np.int64)
+        a = np.concatenate([old_a, src, dst])
+        b = np.concatenate([old_b, dst, src])
+        eid = np.unique(a * g.n + b)         # dedupe + sort by (row, col)
+        a = (eid // g.n).astype(np.int64)
+        b = (eid % g.n).astype(np.int32)
+        indptr = np.zeros(g.n + 1, g.indptr.dtype)
+        np.add.at(indptr, a + 1, 1)
+        new_graph = dataclasses.replace(
+            g, indptr=np.cumsum(indptr).astype(g.indptr.dtype),
+            indices=b)
+        # rows whose ã entries moved: endpoints + their (new) neighbors
+        touched = np.zeros(g.n, bool)
+        ends = np.unique(np.concatenate([src, dst]))
+        touched[ends] = True
+        for u in ends:
+            touched[new_graph.neighbors(u)] = True
+        tids = np.nonzero(touched)[0].astype(np.int32)
+        idx_t, w_t, ws_t = to_ell(new_graph, max_deg=self.max_deg,
+                                  rows=tids)
+        k_new = idx_t.shape[1]
+        if k_new > self.K:                   # uncapped ELL grew a column
+            pad = k_new - self.K
+            self.idx = np.pad(self.idx, ((0, 0), (0, pad)))
+            self.w = np.pad(self.w, ((0, 0), (0, pad)))
+            self.K = k_new
+        self.idx[tids, :k_new] = idx_t
+        self.w[tids, :k_new] = w_t
+        self.w_self[tids] = ws_t
+        self.graph = new_graph
+        self._rev = None
+        self._dirty_row[tids] = True
+        self._final_np = None
+
+    # ------------------------------------------------------------------
+    # forward-influence frontier
+    # ------------------------------------------------------------------
+    def _reverse_index(self):
+        """CSR over 'ELL rows referencing node u' (nonzero weights only;
+        the self-loop contribution is implicit: w_self > 0 always, so u
+        itself is added to the frontier separately via ``changed``)."""
+        if self._rev is None:
+            r, c = np.nonzero(self.w > 0)
+            ref = self.idx[r, c]
+            order = np.argsort(ref, kind="stable")
+            ref_s, rows_s = ref[order], r[order].astype(np.int32)
+            indptr = np.zeros(self.graph.n + 1, np.int64)
+            np.add.at(indptr, ref_s.astype(np.int64) + 1, 1)
+            self._rev = (np.cumsum(indptr), rows_s)
+        return self._rev
+
+    def _referencing(self, mask: np.ndarray) -> np.ndarray:
+        """Bool mask of ELL rows that aggregate any node in ``mask``."""
+        indptr, rows = self._reverse_index()
+        out = np.zeros(self.graph.n, bool)
+        nodes = np.nonzero(mask)[0]
+        if nodes.size == 0:
+            return out
+        start, end = indptr[nodes], indptr[nodes + 1]
+        counts = end - start
+        total = int(counts.sum())
+        if total:
+            offs = np.repeat(start - np.concatenate(([0], counts.cumsum()[:-1])),
+                             counts) + np.arange(total)
+            out[rows[offs]] = True
+        return out
+
+    def frontier(self) -> List[np.ndarray]:
+        """Per-layer bool masks of the rows ``refresh()`` would re-embed
+        (the k-hop forward-influence cone of the dirty set)."""
+        changed = self._dirty_in.copy()
+        fronts = []
+        for _ in self.params:
+            need = self._dirty_row | changed | self._referencing(changed)
+            fronts.append(need)
+            changed = need
+        return fronts
+
+    # ------------------------------------------------------------------
+    # incremental refresh
+    # ------------------------------------------------------------------
+    def refresh(self) -> Dict:
+        """Re-embed only the dirty frontier; equal (allclose) to a full
+        rebuild.  Returns ``{"rows_per_layer": [...], "total_rows": t}``."""
+        if self.layers is None:
+            run = self.build()
+            return {"rows_per_layer": [self.graph.n] * len(self.params),
+                    "total_rows": self.graph.n * len(self.params),
+                    "built": True, "stats": run.stats}
+        if not self.dirty:
+            return {"rows_per_layer": [0] * len(self.params),
+                    "total_rows": 0}
+        if self._dirty_in.any():
+            ids = np.nonzero(self._dirty_in)[0]
+            self._h0 = self._h0.at[jnp.asarray(ids)].set(
+                jnp.asarray(self.graph.feats[ids]))
+        changed = self._dirty_in.copy()
+        rows_per_layer = []
+        for li, p in enumerate(self.params):
+            h = self._h0 if li == 0 else self.layers[li - 1]
+            need = self._dirty_row | changed | self._referencing(changed)
+            ids = np.nonzero(need)[0].astype(np.int32)
+            rows_per_layer.append(int(ids.size))
+            if ids.size:
+                new_rows = self._embed_rows(li, p, h, ids)
+                self.layers[li] = self.layers[li].at[
+                    jnp.asarray(ids)].set(new_rows)
+            changed = need
+        self._dirty_in[:] = False
+        self._dirty_row[:] = False
+        self._final_np = None
+        return {"rows_per_layer": rows_per_layer,
+                "total_rows": int(sum(rows_per_layer))}
+
+    def _embed_rows(self, li: int, p, h, ids: np.ndarray):
+        """Layer ``li`` rows ``ids`` against the full table ``h``,
+        chunk-padded to the build's chunk width so the build pass's
+        compiled ``_chunk_apply`` instances are reused verbatim."""
+        last = li == len(self.params) - 1
+        src = _pre_source(self._scfg, p, h)
+        cs = self.chunk_size
+        outs = []
+        for c0 in range(0, len(ids), cs):
+            sel = ids[c0:c0 + cs]
+            m = len(sel)
+            rows_b = np.zeros(cs, np.int32)
+            idx_b = np.zeros((cs, self.K), np.int32)
+            w_b = np.zeros((cs, self.K), np.float32)
+            ws_b = np.zeros(cs, np.float32)
+            rows_b[:m] = sel
+            idx_b[:m] = self.idx[sel]
+            w_b[:m] = self.w[sel]
+            ws_b[:m] = self.w_self[sel]
+            out = _chunk_apply(self._scfg, last, self.mesh, p, h, src,
+                               *jax.device_put((rows_b, idx_b, w_b, ws_b)))
+            outs.append(out[:m] if m < cs else out)
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, 0)
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+    def _final_table(self) -> np.ndarray:
+        """Host copy of the final-layer table (auto-refreshes first);
+        cached so serving batches of ANY size are numpy slices, not
+        per-shape jit retraces."""
+        if self.dirty:
+            self.refresh()
+        if self._final_np is None:
+            self._final_np = np.asarray(self.layers[-1])
+        return self._final_np
+
+    def query_logits(self, nodes) -> np.ndarray:
+        """Final-layer logit rows for ``nodes`` (auto-refreshes)."""
+        return self._final_table()[np.asarray(nodes, np.int64)]
+
+    def predict(self, nodes) -> np.ndarray:
+        """argmax class per queried node (auto-refreshes)."""
+        return np.argmax(self.query_logits(nodes), axis=-1)

@@ -26,6 +26,8 @@ import os
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import GNNConfig
 from repro.core import faults
 from repro.core.engine import (BatchSource, Callback, ClusterSource,
@@ -70,6 +72,48 @@ def metrics_row(res: TrainResult, target_loss: Optional[float] = None,
     return row
 
 
+def inference_metrics(graph: Graph, cfg: GNNConfig, params, *,
+                      serve_queries: int = 64, seed: int = 0,
+                      chunk_size: Optional[int] = None,
+                      mesh=None) -> Dict:
+    """The sweep's INFERENCE AXIS: serving-cost columns for one trained
+    model (paper extension — training configs compared by whole-pipeline
+    cost, not just steps/s).  Builds the layer-wise embedding store once
+    (``inference_ms_per_node``), answers ``serve_queries`` micro-batched
+    8-node queries through ``GNNServer`` (``serve_p50_ms`` /
+    ``serve_p99_ms`` / ``serve_qps``) and scores the cached final-layer
+    logits on the test split (``serve_acc`` — full-neighborhood
+    inference accuracy, the §4.1 evaluation protocol)."""
+    from repro.core.embedding_store import EmbeddingStore
+    from repro.core.serving import GNNServer
+
+    store = EmbeddingStore(params, cfg, graph,
+                           chunk_size=chunk_size or min(graph.n, 512),
+                           mesh=mesh)
+    run = store.build()
+    test = graph.test_nodes
+    pool = test if len(test) else np.arange(graph.n)
+    rng = np.random.default_rng(seed)
+    server = GNNServer(store, max_batch=32, max_wait_ms=1.0)
+    try:
+        futs = [server.submit(rng.choice(pool, size=8))
+                for _ in range(serve_queries)]
+        for f in futs:
+            f.result(timeout=60.0)
+    finally:
+        server.close()
+    st = server.stats()
+    acc = (float((store.predict(test) == graph.labels[test]).mean())
+           if len(test) else 0.0)
+    return {
+        "inference_ms_per_node": round(run.stats["ms_per_node"], 5),
+        "serve_p50_ms": round(st["p50_ms"], 4),
+        "serve_p99_ms": round(st["p99_ms"], 4),
+        "serve_qps": round(st["qps"], 1),
+        "serve_acc": round(acc, 6),
+    }
+
+
 #: every paradigm name `make_source` dispatches on — the sampler axis of
 #: the (b, β, sampler) cube `sweep(sources=...)` runs
 PARADIGMS = ("fullgraph", "fullgraph_sharded", "minibatch",
@@ -104,7 +148,9 @@ def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                    callbacks: Sequence[Callback] = (),
                    report_loss: Optional[float] = None,
                    report_acc: Optional[float] = None,
-                   keep_result: bool = False) -> Dict:
+                   keep_result: bool = False,
+                   inference: bool = False,
+                   serve_queries: int = 64) -> Dict:
     """One grid point -> one structured row (spec + metrics).
 
     ``paradigm`` is "minibatch" or "fullgraph"; a custom ``source``
@@ -112,7 +158,10 @@ def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
     metrics WITHOUT stopping the run (the plan's ``target_loss`` /
     ``target_acc`` both stop and report).  With ``keep_result`` the full
     TrainResult (params + History) rides along under "_result" for
-    callers that plot curves.
+    callers that plot curves.  ``inference`` appends the serving-cost
+    columns from ``inference_metrics`` (layer-wise embed ms/node, serve
+    p50/p99/qps over ``serve_queries`` queries, cached-embedding test
+    accuracy) so grid points are comparable by whole-pipeline cost.
     """
     # validate the EFFECTIVE (b, fanouts) the run will use, not just the
     # base cfg — bad overrides must fail fast, not deep in the sampler
@@ -151,6 +200,10 @@ def run_experiment(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
         res,
         plan.target_loss if report_loss is None else report_loss,
         plan.target_acc if report_acc is None else report_acc)}
+    if inference:
+        row.update(inference_metrics(graph, cfg, res.params,
+                                     serve_queries=serve_queries,
+                                     seed=plan.seed))
     if keep_result:
         row["_result"] = res
     return row
@@ -213,7 +266,9 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
           sources: Sequence[str] = ("minibatch",),
           seeds: Sequence[int] = (0,),
           verbose: bool = False,
-          journal: Optional[str] = None) -> List[Dict]:
+          journal: Optional[str] = None,
+          inference: bool = False,
+          serve_queries: int = 64) -> List[Dict]:
     """Run the (b, β, sampler) product grid — the paper's §5 plane plus
     a sampler axis over the mini-batch families (``sources`` names from
     ``PARADIGMS``: minibatch, minibatch_sharded, cluster, importance;
@@ -231,7 +286,10 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
     same path skips points already recorded ``ok`` (their journaled rows
     are returned in grid order), and a per-point failure becomes an
     ``status="error"`` row instead of killing the remaining grid
-    (error points are retried on resume).  Independently of the journal,
+    (error points are retried on resume).  ``inference`` appends the
+    serving-cost columns (``inference_metrics``) to every row, making
+    the cube a (b, β, sampler, serving-cost) comparison — the paper
+    extension.  Independently of the journal,
     a point whose Pallas aggregation kernel fails to lower is retried
     once with ``use_agg_kernel=False`` (loud RuntimeWarning; the row
     carries ``agg_kernel_degraded=True``) so one backend quirk does not
@@ -291,7 +349,8 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                 try:
                     row = run_experiment(graph, cfg, plan_pt,
                                          paradigm=paradigm, b=b,
-                                         fanouts=fo)
+                                         fanouts=fo, inference=inference,
+                                         serve_queries=serve_queries)
                 except Exception as e:
                     if not (cfg.use_agg_kernel and _is_pallas_failure(e)):
                         raise
@@ -305,7 +364,8 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                     row = run_experiment(
                         graph,
                         dataclasses.replace(cfg, use_agg_kernel=False),
-                        plan_pt, paradigm=paradigm, b=b, fanouts=fo)
+                        plan_pt, paradigm=paradigm, b=b, fanouts=fo,
+                        inference=inference, serve_queries=serve_queries)
                     row["agg_kernel_degraded"] = True
             except Exception as e:
                 # without a journal this sweep is interactive: fail fast.
@@ -391,6 +451,11 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
                     help="JSONL completion journal: crash-safe sweeps "
                          "— rerunning with the same path skips points "
                          "already recorded ok")
+    ap.add_argument("--inference", action="store_true",
+                    help="append the serving-cost columns to every row "
+                         "(layer-wise embed ms/node, serve p50/p99/qps, "
+                         "cached-embedding test accuracy)")
+    ap.add_argument("--serve-queries", type=int, default=32)
     ap.add_argument("--out", default="sweep_smoke")
     args = ap.parse_args(argv)
 
@@ -406,7 +471,9 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
           else tuple(args.fanout))
     rows = sweep(graph, cfg, plan, batch_sizes=args.bs, fanout_grid=[fo],
                  include_fullgraph=args.fullgraph, sources=args.sources,
-                 verbose=True, journal=args.journal)
+                 verbose=True, journal=args.journal,
+                 inference=args.inference,
+                 serve_queries=args.serve_queries)
     paths = save_rows(args.out, rows)
     print(json.dumps({"rows": len(rows), **paths}))
     return rows

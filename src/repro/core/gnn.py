@@ -163,7 +163,7 @@ def _apply_layer(cfg: GNNConfig, p, h_self, h_nb, mask, w_edge, w_self,
 # ---------------------------------------------------------------------------
 
 def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
-                       w_self, mesh=None):
+                       w_self, mesh=None, return_layers=False):
     """feats [n, r]; ell_idx/ell_w [n, K]; w_self [n] -> logits [n, C].
 
     Distributed-execution shape (§Perf H1, measured in EXPERIMENTS.md):
@@ -187,6 +187,12 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
     NODES mesh axis via shard_map — ELL rows shard, the source table
     replicates, and the VJP psum-reduces the table gradient; the einsum
     path ignores it (GSPMD partitions that one by itself).
+
+    ``return_layers`` additionally returns every layer's POST-activation
+    table ``[h_1, ..., h_L]`` (``h_L`` = the logits) — the per-layer
+    oracle ``core.inference`` validates its layer-wise path against.
+    The default path is untouched (the flag only appends to a Python
+    list), so the pre-existing golden loss sequences stay bit-for-bit.
     """
     from repro import sharding as sh
 
@@ -210,6 +216,7 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
         return jnp.einsum("nk,nkd->nd", w_edge.astype(agg_dt),
                           gather(src)).astype(h.dtype)
 
+    layers = []
     for li, p in enumerate(params):
         last = li == n_layers - 1
         if cfg.model == "gcn":
@@ -241,7 +248,9 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
                 heads = cfg.gat_heads
                 out = out.reshape(out.shape[:-1] + (heads, -1)).mean(-2)
         h = out if last else jax.nn.relu(out)
-    return h
+        if return_layers:
+            layers.append(h)
+    return (h, layers) if return_layers else h
 
 
 # ---------------------------------------------------------------------------

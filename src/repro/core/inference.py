@@ -1,0 +1,308 @@
+"""Layer-wise full-graph GNN inference (the serving tier's embedding
+pass; docs/training_api.md "Inference & serving").
+
+Training-time mini-batch inference pays exponential fan-out: answering b
+queries through a k-layer model touches O(b · Π β_l) nodes.  Layer-wise
+inference (the inference_helper design, SNIPPETS.md Snippet 1) inverts
+the loop order: materialize ALL nodes' layer-l embeddings before any
+layer-(l+1) work, so a k-layer model over n nodes costs O(k · n) ELL
+gathers total and every query afterwards is a table lookup.
+
+The node axis is CHUNKED: each layer streams [chunk_size]-row slices of
+the host ELL through the existing aggregation paths —
+``cfg.use_agg_kernel`` routes a chunk through the batch-tiled Pallas
+kernel (shard-locally over a NODES mesh when ``mesh`` is given, the PR-5
+sharded path), otherwise the einsum gather.  Chunk staging reuses the
+engine's ``Prefetcher`` + ``HostStagingRing``: a background thread
+copies the next chunk's ELL rows into recycled staging buffers while
+the device computes the current one.
+
+Equivalence contract (test-enforced, tests/test_inference.py):
+- per-layer ``allclose`` with the naive ``full_graph_forward`` for every
+  model and both aggregation paths, at any chunk size (including ones
+  that do not divide n);
+- on a 1-device mesh the kernel path is BIT-identical to the unsharded
+  kernel path (inherited from ``neighbor_agg_sharded``);
+- ``prefetch`` on/off is bit-identical (same chunks, same ops).
+
+``core.embedding_store`` builds the cached per-layer tables on top of
+this; ``core.serving`` answers queries from them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core import gnn as G
+from repro.core.engine import _static_cfg
+from repro.core.graph import Graph, to_ell
+from repro.core.prefetch import HostStagingRing, Prefetcher
+
+
+# ---------------------------------------------------------------------------
+# Compiled per-chunk layer step
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _matmul(h, wmat):
+    return h @ wmat
+
+
+def _pre_source(cfg: GNNConfig, p, h):
+    """The full forward's width-shrinking trick, once per LAYER (not per
+    chunk): when a layer narrows (d_out < d_in) the linear transform
+    runs before aggregation (Ã(hW) == (Ãh)W), so every chunk gathers
+    d_out-wide rows.  GAT gathers raw ``h`` (per-edge attention)."""
+    wmat = p.get("w") if cfg.model == "gcn" else p.get("w_neigh")
+    if wmat is not None and wmat.shape[1] < h.shape[1]:
+        return _matmul(h, wmat)
+    return h
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _chunk_apply(cfg: GNNConfig, last: bool, mesh, p, h, src, rows, idx,
+                 w, w_self):
+    """One node-chunk of one layer, mirroring ``full_graph_forward``'s
+    per-layer body row-sliced to the chunk.
+
+    ``h`` [n, d_in] is the full previous-layer table, ``src`` the
+    (possibly pre-transformed) gather source table; ``rows`` [c] are the
+    chunk's global node ids, ``idx``/``w`` [c, K] its ELL rows and
+    ``w_self`` [c] the self-loop weights.  Padded tail rows carry zero
+    weights (their aggregation is exactly zero) and are trimmed by the
+    caller.  Jitted once per (normalized cfg, last, mesh, shapes) at
+    module level, so the store's incremental re-embeds reuse the build
+    pass's compiled functions.
+    """
+    agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
+    mask = (w > 0).astype(h.dtype)
+
+    def agg_w(table, w_edge):
+        t = table.astype(agg_dt)
+        if cfg.use_agg_kernel:
+            return G._kernel_agg(cfg, t, idx, w_edge.astype(agg_dt),
+                                 mesh=mesh).astype(h.dtype)
+        return jnp.einsum("ck,ckd->cd", w_edge.astype(agg_dt),
+                          jnp.take(t, idx, axis=0)).astype(h.dtype)
+
+    if cfg.model == "gcn":
+        wmat = p["w"]
+        pre = wmat.shape[1] < h.shape[1]
+        if cfg.use_agg_kernel:
+            # fused epilogue: the chunk's self rows come from the same
+            # cast source table the kernel gathers from
+            srcr = src.astype(agg_dt)
+            agg = G._kernel_agg(cfg, srcr, idx, w.astype(agg_dt),
+                                self_rows=jnp.take(srcr, rows, axis=0),
+                                w_self=w_self.astype(agg_dt),
+                                mesh=mesh).astype(h.dtype)
+        else:
+            agg = agg_w(src, w) \
+                + w_self[:, None] * jnp.take(src, rows, axis=0)
+        out = agg if pre else agg @ wmat
+    elif cfg.model == "graphsage":
+        wn = p["w_neigh"]
+        pre = wn.shape[1] < h.shape[1]
+        cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        mean = agg_w(src, mask) / cnt
+        out = jnp.take(h, rows, axis=0) @ p["w_self"] \
+            + (mean if pre else mean @ wn)
+    else:  # gat — per-edge softmax attention stays on the einsum path
+        h_rows = jnp.take(h, rows, axis=0)
+        nb = jnp.take(h.astype(agg_dt), idx, axis=0).astype(h.dtype)
+        out = G._gat_layer(p, h_rows, nb, mask.astype(bool))
+        if last:
+            heads = cfg.gat_heads
+            out = out.reshape(out.shape[:-1] + (heads, -1)).mean(-2)
+    return out if last else jax.nn.relu(out)
+
+
+# ---------------------------------------------------------------------------
+# Chunk staging pipeline (Prefetcher + HostStagingRing reuse)
+# ---------------------------------------------------------------------------
+
+class _ChunkStream:
+    """Sequential [chunk_size]-row slices of the host ELL, staged into
+    recycled ``HostStagingRing`` buffers — by a background ``Prefetcher``
+    thread by default, so host-side slicing/padding overlaps the device
+    compute of the previous chunk.  The chunk sequence CYCLES: one full
+    pass per layer (``passes`` = n_layers), since the ELL rows are
+    layer-independent."""
+
+    def __init__(self, ell: Tuple[np.ndarray, np.ndarray, np.ndarray],
+                 n: int, chunk_size: int, passes: int,
+                 prefetch: bool = True, depth: int = 2):
+        self._idx, self._w, self._w_self = ell
+        self.n = n
+        self.cs = chunk_size
+        self.K = self._idx.shape[1]
+        self.n_chunks = -(-n // chunk_size)
+        # queued payloads (depth) + one being staged + one at the consumer
+        self._ring = HostStagingRing(depth + 2)
+        counter = itertools.count()
+
+        def sample_fn(rng, graph, batch_size, fanouts):
+            return next(counter) % self.n_chunks
+
+        self._sample = sample_fn
+        self._pf: Optional[Prefetcher] = None
+        if prefetch:
+            self._pf = Prefetcher(
+                None, 0, (), seed=0, depth=depth,
+                n_batches=passes * self.n_chunks,
+                payload_fn=self._stage, sample_fn=sample_fn)
+
+    def _stage(self, graph, ci: int):
+        """Copy chunk ``ci``'s ELL rows into a staging slot (padded to
+        the fixed chunk width with zero-weight rows, so every chunk has
+        ONE compiled shape).  Runs on the Prefetcher worker thread."""
+        c0 = ci * self.cs
+        c1 = min(c0 + self.cs, self.n)
+        m = c1 - c0
+        specs = [((self.cs,), np.int32), ((self.cs, self.K), np.int32),
+                 ((self.cs, self.K), np.float32), ((self.cs,), np.float32)]
+        slot = self._ring.acquire()
+        try:
+            rows_b, idx_b, w_b, ws_b = self._ring.buffers(slot, specs)
+            rows_b[:m] = np.arange(c0, c1, dtype=np.int32)
+            idx_b[:m] = self._idx[c0:c1]
+            w_b[:m] = self._w[c0:c1]
+            ws_b[:m] = self._w_self[c0:c1]
+            if m < self.cs:          # zero-weight padding rows
+                rows_b[m:] = 0
+                idx_b[m:] = 0
+                w_b[m:] = 0.0
+                ws_b[m:] = 0.0
+        except BaseException:
+            # never strand a slot on a dying worker (engine convention)
+            self._ring.release(slot)
+            raise
+        return slot, (rows_b, idx_b, w_b, ws_b, m)
+
+    def next(self):
+        """-> ((rows, idx, w, w_self) device arrays, n_valid, slot).
+
+        CPU ``device_put`` ZERO-COPIES sufficiently aligned host buffers
+        — the returned device arrays may alias the slot's staging
+        memory, so the slot must stay unreleased until the chunk's
+        consuming COMPUTATION has finished (the engine's release-after-
+        step-sync rule), not merely until the transfer lands.  The
+        caller hands the slot back via ``release`` after syncing."""
+        if self._pf is not None:
+            _, payload = self._pf.next()
+        else:
+            payload = self._stage(None, self._sample(None, None, 0, ()))
+        slot, (rows, idxb, wb, wsb, m) = payload
+        dev = jax.device_put((rows, idxb, wb, wsb))
+        return dev, m, slot
+
+    def release(self, slot: int) -> None:
+        self._ring.release(slot)
+
+    def close(self):
+        self._ring.close()
+        if self._pf is not None:
+            pf, self._pf = self._pf, None
+            pf.close()
+
+
+# ---------------------------------------------------------------------------
+# Layer-wise inference
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InferenceRun:
+    """Per-layer embedding tables plus timing stats.
+
+    ``layers[l]`` is the POST-activation [n, d_l] table (what feeds
+    layer l+1); ``layers[-1]`` are the logits — per-layer equal to
+    ``full_graph_forward(..., return_layers=True)``."""
+    layers: List[jax.Array]
+    stats: Dict[str, float]
+
+    @property
+    def logits(self):
+        return self.layers[-1]
+
+
+def layerwise_layers(params, cfg: GNNConfig, feats,
+                     ell: Tuple[np.ndarray, np.ndarray, np.ndarray], *,
+                     chunk_size: int = 1024, mesh=None,
+                     prefetch: bool = True) -> InferenceRun:
+    """Layer-wise inference over host ELL arrays ``(idx, w, w_self)``.
+
+    Per layer: the (optional) width-shrinking pre-transform runs ONCE on
+    the full table, then every node chunk aggregates against it through
+    the configured kernel/einsum path; the concatenated rows become the
+    next layer's table.  Memory high-water mark is O(n · d) tables plus
+    one [chunk, K, d] gather — never the [n, K, d] blowup, and never the
+    exponential fan-out tree."""
+    scfg = _static_cfg(cfg)
+    n = int(feats.shape[0])
+    if n == 0:
+        raise ValueError("layerwise_layers: empty graph (n=0)")
+    cs = max(1, min(int(chunk_size) if chunk_size else n, n))
+    h = jnp.asarray(feats)
+    stream = _ChunkStream(ell, n, cs, passes=len(params),
+                          prefetch=prefetch)
+    layers: List[jax.Array] = []
+    per_layer: List[float] = []
+    t0 = time.perf_counter()
+    try:
+        for li, p in enumerate(params):
+            lt0 = time.perf_counter()
+            last = li == len(params) - 1
+            src = _pre_source(scfg, p, h)
+            outs = []
+            for _ in range(stream.n_chunks):
+                (rows, cidx, cw, cws), m, slot = stream.next()
+                out = _chunk_apply(scfg, last, mesh, p, h, src, rows,
+                                   cidx, cw, cws)
+                # sync BEFORE recycling the slot: the chunk operands may
+                # alias the staging buffers (zero-copy device_put)
+                jax.block_until_ready(out)
+                stream.release(slot)
+                outs.append(out if m == cs else out[:m])
+            h = outs[0] if len(outs) == 1 else jnp.concatenate(outs, 0)
+            jax.block_until_ready(h)
+            layers.append(h)
+            per_layer.append(round(time.perf_counter() - lt0, 6))
+    finally:
+        stream.close()
+    total = time.perf_counter() - t0
+    stats = {
+        "n_nodes": n, "n_layers": len(params), "chunk_size": cs,
+        "n_chunks": stream.n_chunks,
+        "chunk_steps": len(params) * stream.n_chunks,
+        "total_s": round(total, 6),
+        "per_layer_s": per_layer,
+        "ms_per_node": round(1000.0 * total / n, 6),
+    }
+    return InferenceRun(layers=layers, stats=stats)
+
+
+def layerwise_embeddings(params, cfg: GNNConfig, graph: Graph, *,
+                         max_deg: Optional[int] = None,
+                         chunk_size: int = 1024, mesh=None,
+                         prefetch: bool = True) -> InferenceRun:
+    """Layer-wise inference straight from a ``Graph`` (ELL derived here;
+    ``max_deg=None`` keeps ALL neighbors — inference uses the full
+    neighborhood, §4.1)."""
+    ell = to_ell(graph, max_deg=max_deg)
+    return layerwise_layers(params, cfg, graph.feats, ell,
+                            chunk_size=chunk_size, mesh=mesh,
+                            prefetch=prefetch)
+
+
+def layerwise_logits(params, cfg: GNNConfig, graph: Graph,
+                     **kw) -> jax.Array:
+    """Final-layer logits [n, C] only."""
+    return layerwise_embeddings(params, cfg, graph, **kw).logits

@@ -1,0 +1,198 @@
+"""Batched node-classification serving over an ``EmbeddingStore``.
+
+``GNNServer`` is the query front of the inference tier: callers submit
+node-id queries from any thread; a single batcher thread coalesces them
+into micro-batches (up to ``max_batch`` queried nodes, or whatever has
+arrived within ``max_wait_ms`` of the first request) and answers each
+batch with ONE final-layer table lookup + argmax.  Because the store
+caches layer-wise embeddings, serving cost is O(queried nodes) — no
+fan-out tree, no per-query forward pass; the exponential-neighborhood
+cost was paid once at build time (docs/training_api.md "Inference &
+serving").
+
+Dirty stores refresh lazily ON the batcher thread (``store.predict``
+auto-refreshes), so a graph update delays only the first batch after
+it, by the incremental re-embed cost.
+
+``stats()`` exposes the counters the sweep's inference axis and the
+serve benchmarks record: request p50/p99/mean latency (ms), answered
+queries/s, batch counts and mean occupancy.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.embedding_store import EmbeddingStore
+
+_STOP = object()
+
+
+class ServeStats:
+    """Thread-safe latency/throughput counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._lat_ms: List[float] = []
+        self.n_requests = 0
+        self.n_queries = 0
+        self.n_batches = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    def record(self, n_requests: int, n_queries: int,
+               lat_ms: Sequence[float], t0: float, t1: float) -> None:
+        with self._lock:
+            self.n_requests += n_requests
+            self.n_queries += n_queries
+            self.n_batches += 1
+            self._lat_ms.extend(lat_ms)
+            if self._t_first is None:
+                self._t_first = t0
+            self._t_last = t1
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            lat = np.asarray(self._lat_ms, np.float64)
+            span = ((self._t_last - self._t_first)
+                    if self._t_first is not None else 0.0)
+            return {
+                "n_requests": self.n_requests,
+                "n_queries": self.n_queries,
+                "n_batches": self.n_batches,
+                "mean_batch_queries": (self.n_queries / self.n_batches
+                                       if self.n_batches else 0.0),
+                "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+                "mean_ms": float(lat.mean()) if lat.size else 0.0,
+                "qps": (self.n_queries / span) if span > 0 else 0.0,
+            }
+
+
+class _Request:
+    __slots__ = ("nodes", "future", "t")
+
+    def __init__(self, nodes: np.ndarray):
+        self.nodes = nodes
+        self.future: "Future[np.ndarray]" = Future()
+        self.t = time.perf_counter()
+
+
+class GNNServer:
+    """Micro-batching query server over a built ``EmbeddingStore``.
+
+    ``start=False`` defers the batcher thread (requests queue up and
+    coalesce deterministically once ``start()`` runs — used by the
+    batching tests); default is to start immediately."""
+
+    def __init__(self, store: EmbeddingStore, *, max_batch: int = 64,
+                 max_wait_ms: float = 2.0, start: bool = True):
+        self.store = store
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait_ms = float(max_wait_ms)
+        self.serve_stats = ServeStats()
+        self._q: "queue.Queue" = queue.Queue()
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    def start(self) -> None:
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------
+    # client side
+    # ------------------------------------------------------------------
+    def submit(self, nodes) -> "Future[np.ndarray]":
+        """Enqueue a query for ``nodes``; resolves to int predictions
+        aligned with the request order."""
+        if self._closed:
+            raise RuntimeError("GNNServer is closed")
+        nodes = np.atleast_1d(np.asarray(nodes, np.int64))
+        req = _Request(nodes)
+        self._q.put(req)
+        return req.future
+
+    def classify(self, nodes, timeout: Optional[float] = 30.0
+                 ) -> np.ndarray:
+        """Blocking ``submit``."""
+        return self.submit(nodes).result(timeout=timeout)
+
+    def stats(self) -> Dict:
+        return self.serve_stats.snapshot()
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Drain queued requests, then stop the batcher."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(_STOP)
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
+    # batcher thread
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is _STOP:
+                return
+            batch = [item]
+            n = len(item.nodes)
+            deadline = item.t + self.max_wait_ms / 1000.0
+            stop = False
+            while n < self.max_batch:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    try:
+                        nxt = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                else:
+                    try:
+                        nxt = self._q.get(timeout=wait)
+                    except queue.Empty:
+                        break
+                if nxt is _STOP:
+                    stop = True
+                    break
+                batch.append(nxt)
+                n += len(nxt.nodes)
+            self._serve(batch)
+            if stop:
+                return
+
+    def _serve(self, batch: List[_Request]) -> None:
+        t0 = time.perf_counter()
+        try:
+            ids = np.concatenate([r.nodes for r in batch])
+            preds = self.store.predict(ids)       # auto-refresh if dirty
+            t1 = time.perf_counter()
+            off = 0
+            lats = []
+            for r in batch:
+                k = len(r.nodes)
+                r.future.set_result(preds[off:off + k])
+                off += k
+                lats.append((t1 - r.t) * 1000.0)
+            self.serve_stats.record(len(batch), len(ids), lats, t0, t1)
+        except BaseException as e:               # surface on the futures
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(e)

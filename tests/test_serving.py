@@ -1,0 +1,149 @@
+"""GNNServer (PR 7): request micro-batching, latency/throughput
+counters, and answer correctness against the direct forward — plus the
+experiment module's inference axis riding on the same stack."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GNNConfig
+from repro.core import gnn as G
+from repro.core.embedding_store import EmbeddingStore
+from repro.core.graph import to_ell
+from repro.core.serving import GNNServer
+
+
+def _cfg(g, **kw):
+    base = dict(name="srv", model="graphsage", n_nodes=g.n,
+                feat_dim=g.feats.shape[1], hidden=8,
+                n_classes=g.n_classes, n_layers=2, fanout=(4, 3),
+                batch_size=32, loss="ce")
+    base.update(kw)
+    return GNNConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def served(small_graph):
+    cfg = _cfg(small_graph)
+    params = G.init_gnn(jax.random.key(0), cfg,
+                        small_graph.feats.shape[1])
+    store = EmbeddingStore(params, cfg, small_graph, chunk_size=64)
+    store.build()
+    idx, w, ws = to_ell(small_graph)
+    logits = G.full_graph_forward(params, cfg,
+                                  jnp.asarray(small_graph.feats),
+                                  jnp.asarray(idx), jnp.asarray(w),
+                                  jnp.asarray(ws))
+    return store, params, cfg, np.argmax(np.asarray(logits), -1)
+
+
+def test_answers_match_direct_forward(served):
+    store, _, _, expect = served
+    rng = np.random.default_rng(0)
+    with GNNServer(store, max_batch=16, max_wait_ms=1.0) as server:
+        for _ in range(5):
+            q = rng.integers(0, store.graph.n, size=rng.integers(1, 12))
+            assert np.array_equal(server.classify(q), expect[q])
+        st = server.stats()
+    assert st["n_requests"] == 5 and st["n_batches"] >= 1
+    assert st["p99_ms"] >= st["p50_ms"] > 0.0
+    assert st["qps"] > 0.0 and st["mean_batch_queries"] > 0.0
+
+
+def test_microbatch_coalescing_deterministic(served):
+    """``start=False`` queues requests before the batcher runs, so
+    coalescing is deterministic: 10 one-node requests under max_batch=4
+    are served in exactly ceil(10/4) = 3 batches."""
+    store, _, _, expect = served
+    server = GNNServer(store, max_batch=4, max_wait_ms=20.0, start=False)
+    futs = [server.submit([i]) for i in range(10)]
+    server.start()
+    try:
+        for i, f in enumerate(futs):
+            assert f.result(timeout=30.0)[0] == expect[i]
+        st = server.stats()
+        assert st["n_requests"] == 10
+        assert st["n_queries"] == 10
+        assert st["n_batches"] == 3
+    finally:
+        server.close()
+
+
+def test_max_batch_one_disables_coalescing(served):
+    store, _, _, _ = served
+    server = GNNServer(store, max_batch=1, max_wait_ms=20.0, start=False)
+    futs = [server.submit([i]) for i in range(6)]
+    server.start()
+    try:
+        for f in futs:
+            f.result(timeout=30.0)
+        assert server.stats()["n_batches"] == 6
+    finally:
+        server.close()
+
+
+def test_max_wait_flushes_partial_batch(served):
+    """A lone request must not wait for max_batch to fill — the
+    max_wait_ms deadline flushes it."""
+    store, _, _, expect = served
+    with GNNServer(store, max_batch=1024, max_wait_ms=5.0) as server:
+        t0 = time.perf_counter()
+        out = server.classify([3], timeout=30.0)
+        took = time.perf_counter() - t0
+    assert out[0] == expect[3]
+    assert took < 10.0       # flushed by deadline, not stuck
+
+
+def test_serving_after_update_uses_incremental_refresh(small_graph):
+    g = dataclasses.replace(small_graph, feats=small_graph.feats.copy())
+    cfg = _cfg(g)
+    params = G.init_gnn(jax.random.key(1), cfg, g.feats.shape[1])
+    store = EmbeddingStore(params, cfg, g, chunk_size=64)
+    store.build()
+    rng = np.random.default_rng(2)
+    with GNNServer(store, max_batch=8, max_wait_ms=1.0) as server:
+        server.classify([0, 1])
+        store.update_features(
+            [5], rng.normal(size=(1, g.feats.shape[1]))
+            .astype(np.float32))
+        q = rng.integers(0, g.n, size=16)
+        got = server.classify(q)             # refreshes on the batcher
+    assert not store.dirty
+    idx, w, ws = to_ell(store.graph)
+    logits = G.full_graph_forward(params, cfg,
+                                  jnp.asarray(store.graph.feats),
+                                  jnp.asarray(idx), jnp.asarray(w),
+                                  jnp.asarray(ws))
+    assert np.array_equal(got, np.argmax(np.asarray(logits), -1)[q])
+
+
+def test_submit_after_close_raises(served):
+    store, _, _, _ = served
+    server = GNNServer(store, max_batch=4)
+    server.classify([0])
+    server.close()
+    server.close()                            # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit([1])
+
+
+def test_experiment_inference_axis(small_graph):
+    """run_experiment(inference=True) appends the serving-cost columns,
+    and the cached-embedding accuracy equals the trainer's own
+    full-neighborhood test accuracy."""
+    from repro.core.engine import TrainPlan
+    from repro.core.experiment import run_experiment
+    cfg = _cfg(small_graph, hidden=16)
+    plan = TrainPlan(lr=0.3, n_iters=3, eval_every=2, seed=0)
+    row = run_experiment(small_graph, cfg, plan, paradigm="minibatch",
+                         b=32, fanouts=(4, 3), inference=True,
+                         serve_queries=6)
+    for key in ("inference_ms_per_node", "serve_p50_ms", "serve_p99_ms",
+                "serve_qps", "serve_acc"):
+        assert key in row, key
+    assert row["inference_ms_per_node"] > 0
+    assert row["serve_p99_ms"] >= row["serve_p50_ms"] > 0
+    assert row["serve_acc"] == pytest.approx(row["test_acc"], abs=1e-6)
