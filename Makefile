@@ -1,5 +1,5 @@
 .PHONY: check test bench-quick bench-engine bench-engine-baseline \
-	sweep-smoke serve-smoke chaos
+	bench-promote sweep-smoke serve-smoke chaos
 
 check:
 	bash scripts/ci.sh
@@ -17,6 +17,12 @@ bench-engine:
 
 bench-engine-baseline:
 	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --devices 4
+
+# refresh BENCH_engine.json only if the regression gate passes (atomic
+# tmp+rename; a red gate leaves the committed baseline untouched)
+bench-promote:
+	PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke --check \
+	--promote --devices 4
 
 serve-smoke:
 	PYTHONPATH=src python -m repro.launch.serve --smoke --nodes 300 \
@@ -42,3 +48,13 @@ sweep-smoke:
 	'--bs', '32', '--fanout', '3', '--layers', '1', '--kernel', \
 	'--sources', 'minibatch_sharded', \
 	'--out', 'ci_sweep_smoke_sharded_kernel'])"
+	# 4-virtual-device featshard point: NODES-sharded feature table +
+	# hot cache through the full-graph kernel path (the XLA flag must be
+	# set before jax initializes, hence the separate process)
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	JAX_PLATFORMS=cpu PYTHONPATH=src:. python -c \
+	"from repro.core.experiment import main; \
+	main(['--preset', 'arxiv-like', '--n', '300', '--iters', '3', \
+	'--bs', '32', '--fanout', '3', '--layers', '1', '--kernel', \
+	'--feats-layout', 'sharded', '--sources', 'fullgraph_sharded', \
+	'--out', 'ci_sweep_smoke_featshard'])"

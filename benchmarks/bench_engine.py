@@ -18,9 +18,11 @@ Writes ``BENCH_engine.json`` at the REPO ROOT so every subsequent PR has
 a perf trajectory to regress against.  ``--check`` (CI mode) compares
 fresh numbers to the committed baseline and fails with a readable
 per-variant diff when steady-state steps/s regresses more than
-``BENCH_TOL`` (default 25%); in that mode the baseline is NEVER
-rewritten (fresh rows land in ``BENCH_engine.json.new``), so repeated
-local runs cannot ratchet the bar down and CI leaves the tree clean.
+``BENCH_TOL`` (default 25%); in that mode the baseline is only replaced
+when ``--promote`` is given AND the gate passes (atomic tmp+rename via
+``BENCH_engine.json.new``) — otherwise the side file is deleted before
+exit, so repeated local runs cannot ratchet the bar down and CI leaves
+the tree clean (``make bench-promote`` wraps the refresh).
 Interpret-mode kernel cells and ``inference`` rows are recorded but
 excluded from the gate (their few-iteration CPU wall-clock is noise —
 a smoke embedding build is ~8 sub-ms chunk dispatches); a baseline
@@ -81,12 +83,14 @@ def run_variant(graph, cfg, paradigm: str, iters: int, fast: bool,
                      (len(times) - 1) / (times[-1] - times[0])
                      if len(times) > 1 and times[-1] > times[0] else 0.0)
     n_dev = len(jax.devices())
-    return {
+    featshard = cfg.feats_layout == "sharded"
+    row = {
         # multi-device runs key their variants by device count, so a
         # 4-device row diffs against the 4-device baseline row — never
         # against (or over) the 1-device one
         "variant": f"{paradigm}"
                    f"{'+kernel' if cfg.use_agg_kernel else ''}"
+                   f"{'+featshard' if featshard else ''}"
                    f"{'+fast' if fast else ''}"
                    f"{f'@{n_dev}dev' if n_dev > 1 else ''}",
         "paradigm": paradigm,
@@ -98,6 +102,17 @@ def run_variant(graph, cfg, paradigm: str, iters: int, fast: bool,
         "steady_steps_per_s": round(steady, 2),
         "final_loss": round(res.history.losses[-1], 6),
     }
+    if featshard:
+        # the hot-cache accounting the sources surface at train end:
+        # full-graph plans report bind-time classification, sampled
+        # sources report the host LRU — either way the same keys
+        c = res.history.counters
+        row["cache_hit_rate"] = round(c.get("feat_cache_hit_rate", 0.0), 4)
+        row["remote_gather_bytes"] = int(c.get("feat_remote_gather_bytes",
+                                               0))
+        row["table_bytes_per_device"] = int(
+            c.get("feat_table_bytes_per_device", 0))
+    return row
 
 
 def run_inference_variant(graph, cfg, seed: int = 0, repeats: int = 2,
@@ -205,11 +220,19 @@ def run_sharded(smoke: bool = True, seed: int = 0) -> List[Dict]:
     for both sharded sources.  Meant to run under
     ``--xla_force_host_platform_device_count=N`` via ``--devices``."""
     graph, cfg, kcfg, iters, kernel_iters = _bench_setup(smoke, seed)
+    # NODES-sharded feature table + degree-ordered hot cache: kernel=1
+    # keeps these cells record-only (interpret mode), but their
+    # cache_hit_rate / remote_gather_bytes columns ARE the bench's
+    # feature-traffic trajectory
+    fscfg = dataclasses.replace(kcfg, feats_layout="sharded",
+                                feat_cache_rows=-1)
     rows = []
     for paradigm in ("fullgraph_sharded", "minibatch_sharded"):
         rows.append(run_variant(graph, cfg, paradigm, iters, True,
                                 seed=seed, repeats=3))
         rows.append(run_variant(graph, kcfg, paradigm, kernel_iters,
+                                True, seed=seed))
+        rows.append(run_variant(graph, fscfg, paradigm, kernel_iters,
                                 True, seed=seed))
     # layer-wise inference through the NODES-sharded kernel path
     # (record-only: kernel rows are excluded from the gate)
@@ -318,6 +341,11 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="fail on >BENCH_TOL steps/s regression vs the "
                          "committed BENCH_engine.json")
+    ap.add_argument("--promote", action="store_true",
+                    help="with --check: when the gate passes, atomically "
+                         "replace the committed baseline with the fresh "
+                         "numbers (tmp file + rename); without this flag "
+                         "--check never touches the baseline")
     ap.add_argument("--devices", type=int, default=0,
                     help="additionally run the sharded variant set in a "
                          "subprocess with N virtual CPU devices "
@@ -353,16 +381,32 @@ def main(argv=None) -> int:
     payload = {"bench": "engine", "smoke": bool(args.smoke),
                "devices": len(jax.devices()), "rows": rows}
     if args.check:
-        # gate mode never touches the baseline (no ratchet, no dirty
-        # tree in CI); fresh numbers land next to it for inspection
+        # gate mode never silently rewrites the baseline (no ratchet):
+        # fresh numbers go to a side file, which either gets PROMOTED
+        # over the baseline via an atomic same-directory rename
+        # (--promote, gate green) or is deleted before exit — CI and
+        # repeated local runs leave the tree clean either way
         failures = check_regression(rows, baseline_path=args.out,
                                     smoke=bool(args.smoke))
         side = args.out + ".new"
-        with open(side, "w") as f:
-            json.dump(payload, f, indent=1)
-            f.write("\n")
-        print(f"bench_engine: wrote {side} (baseline {args.out} "
-              "untouched in --check mode)")
+        try:
+            with open(side, "w") as f:
+                json.dump(payload, f, indent=1)
+                f.write("\n")
+            if args.promote and not failures:
+                os.replace(side, args.out)   # atomic: tmp + rename
+                print(f"bench_engine: gate passed — promoted fresh "
+                      f"numbers to {args.out}")
+            elif args.promote:
+                print(f"bench_engine: gate FAILED — baseline {args.out} "
+                      "left untouched despite --promote")
+            else:
+                print(f"bench_engine: baseline {args.out} untouched in "
+                      "--check mode (pass --promote to refresh it on a "
+                      "green gate)")
+        finally:
+            if os.path.exists(side):
+                os.remove(side)
         return 1 if failures else 0
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)

@@ -28,7 +28,8 @@ python benchmarks/bench_engine.py --smoke --check --devices 4
 
 echo "== experiment sweep smoke (2 minibatch grid points + one point =="
 echo "== per scenario source: cluster / importance / minibatch_sharded, =="
-echo "== plus one sharded x Pallas-kernel point, interpret mode) =="
+echo "== plus one sharded x Pallas-kernel point and one 4-virtual- =="
+echo "== device feats_layout=sharded (featshard) point, interpret mode) =="
 make sweep-smoke
 
 echo "== serving smoke (layer-wise embedding build == naive forward, =="

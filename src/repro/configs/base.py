@@ -146,6 +146,17 @@ class GNNConfig:
     agg_b_tile: int = 8
     agg_d_tile: int = 128
     agg_k_slab: int = 4
+    # --- feature-table layout (kernels/neighbor_agg/featshard) ---
+    # "replicated": every device holds the full [n, d] gather source (the
+    # PR-5 sharded kernel's layout).  "sharded": the table rows over the
+    # NODES mesh axis with a degree-ordered hot cache of the top
+    # feat_cache_rows high-degree rows replicated per shard — per-device
+    # memory drops to n·d/shards + C·d and cold rows move via one
+    # compacted all_gather overlapped with the shard-local aggregation.
+    # Takes effect on the sharded kernel paths (sharded sources +
+    # use_agg_kernel); einsum/unsharded paths ignore it.
+    feats_layout: str = "replicated"     # replicated | sharded
+    feat_cache_rows: int = -1            # -1 auto (n//8) | 0 off | explicit C
     source: str = ""
 
     @property
@@ -182,6 +193,12 @@ class GNNConfig:
         for f in ("agg_b_tile", "agg_d_tile", "agg_k_slab"):
             req(getattr(self, f) > 0,
                 f"{f} must be > 0, got {getattr(self, f)}")
+        req(self.feats_layout in ("replicated", "sharded"),
+            f"unknown feats_layout {self.feats_layout!r} "
+            f"(expected 'replicated' or 'sharded')")
+        req(self.feat_cache_rows >= -1,
+            f"feat_cache_rows must be -1 (auto), 0 (off) or a positive "
+            f"cache size, got {self.feat_cache_rows}")
 
 
 # ---------------------------------------------------------------------------

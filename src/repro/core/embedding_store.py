@@ -65,6 +65,22 @@ class EmbeddingStore:
         self.idx, self.w, self.w_self = to_ell(graph, max_deg=max_deg)
         self.K = self.idx.shape[1]
         self._h0 = jnp.asarray(graph.feats)
+        # feats_layout="sharded": the full build runs the NODES-sharded
+        # featshard pass (no replicated table); incremental refreshes
+        # keep the chunked path — dirty frontiers are tiny row sets
+        self.feats_plan = None
+        if (cfg.feats_layout == "sharded" and cfg.use_agg_kernel
+                and mesh is not None
+                and cfg.model in ("gcn", "graphsage")):
+            from repro import sharding as sh
+            from repro.kernels.neighbor_agg.ops import build_featshard_plan
+            pad = (-graph.n) % sh.nodes_shards(mesh)
+            idx_p = (np.pad(self.idx, ((0, pad), (0, 0)))
+                     if pad else self.idx)
+            w_p = np.pad(self.w, ((0, pad), (0, 0))) if pad else self.w
+            self.feats_plan = build_featshard_plan(
+                idx_p, w_p, graph.degrees, mesh,
+                cache_rows=cfg.feat_cache_rows)
         self.layers: Optional[List[jax.Array]] = None
         self.build_stats: Optional[Dict] = None
         self._dirty_in = np.zeros(graph.n, bool)    # layer-0 inputs moved
@@ -80,7 +96,8 @@ class EmbeddingStore:
         run = layerwise_layers(self.params, self.cfg, self._h0,
                                (self.idx, self.w, self.w_self),
                                chunk_size=self.chunk_size, mesh=self.mesh,
-                               prefetch=self.prefetch)
+                               prefetch=self.prefetch,
+                               feats_plan=self.feats_plan)
         self.layers = list(run.layers)
         self.build_stats = run.stats
         self._dirty_in[:] = False

@@ -138,11 +138,14 @@ def _static_cfg(cfg: GNNConfig) -> GNNConfig:
         fanout=(1,) * cfg.n_layers, max_degree=1, n_nodes=0, feat_dim=0)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 8))
+@functools.partial(jax.jit, static_argnums=(1, 8, 9))
 def _eval_acc(params, cfg: GNNConfig, idx, w, w_self, feats, labels,
-              nodes, mesh=None):
+              nodes, mesh=None, feats_plan=None):
+    # feats_plan (identity-hashed FeatShardPlan) rides as a STATIC arg:
+    # it only steers tracing (featshard vs replicated kernel dispatch);
+    # its device index arrays are closed over inside the op
     logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self,
-                                  mesh=mesh)
+                                  mesh=mesh, feats_plan=feats_plan)
     return G.accuracy(logits[nodes], labels[nodes])
 
 
@@ -175,15 +178,18 @@ def _graph_fn_cache(graph: Graph, key, build):
     return hit[0]
 
 
-def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel, mesh=None):
+def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel, mesh=None,
+                      feats_plan=None):
     """Full-training-objective loss (params -> device scalar), closure
     over the device ELL (closing over, instead of passing as arguments,
     keeps the pre-cache jaxpr and therefore the golden full-loss values
     bit-for-bit).  ``mesh`` (sharded sources with the kernel on)
-    partitions the kernel's aggregation over the NODES axis."""
+    partitions the kernel's aggregation over the NODES axis;
+    ``feats_plan`` additionally row-shards the source table
+    (feats_layout="sharded")."""
     scfg = _static_cfg(cfg)
     key = ("full_loss", scfg, mesh,
-           tuple(id(c) for c in ell) + (id(sel),))
+           tuple(id(c) for c in ell) + (id(sel), id(feats_plan)))
 
     def build():
         idx, w, w_self, feats, labels = ell
@@ -191,24 +197,26 @@ def _cached_full_loss(graph: Graph, cfg: GNNConfig, ell, sel, mesh=None):
         @jax.jit
         def full_loss(params):
             logits = G.full_graph_forward(params, scfg, feats, idx, w,
-                                          w_self, mesh=mesh)
+                                          w_self, mesh=mesh,
+                                          feats_plan=feats_plan)
             return G.gnn_loss(logits[sel], labels[sel], scfg.loss,
                               scfg.n_classes)
 
-        return full_loss, (ell, sel)
+        return full_loss, (ell, sel, feats_plan)
 
     return _graph_fn_cache(graph, key, build)
 
 
 def evaluate_full(params, cfg: GNNConfig, graph: Graph, ell, nodes,
-                  mesh=None) -> float:
+                  mesh=None, feats_plan=None) -> float:
     """Inference uses ALL neighbors across the entire graph (§4.1).
     Jitted once per (normalized config, shapes) at module level — NOT
     per Trainer — so sweeps stop paying eval retrace at every grid
     point."""
     idx, w, w_self, feats, labels = ell
     return float(_eval_acc(params, _static_cfg(cfg), idx, w, w_self,
-                           feats, labels, jnp.asarray(nodes), mesh))
+                           feats, labels, jnp.asarray(nodes), mesh,
+                           feats_plan))
 
 
 # ---------------------------------------------------------------------------
@@ -568,25 +576,66 @@ class ShardedFullGraphSource(FullGraphSource):
                    jax.device_put(np.ascontiguousarray(labels), rows1))
             cache[key] = (ell, repl, {})
         self.ell, self._repl, self._splits = cache[key]
+        self.feats_plan = None
+        self.featshard_stats = None
+        if cfg.feats_layout == "sharded" and cfg.use_agg_kernel:
+            self.feats_plan = self._bind_featshard(graph, cfg, mesh, key,
+                                                   n_dev)
         self.train_nodes = self.node_split("train")
         self.n_nodes = len(graph.train_nodes)
         return self
 
+    def _bind_featshard(self, graph, cfg, mesh, key, n_dev):
+        """Build (or reuse) the static featshard plan for this
+        (ELL, mesh, C) and record the bind-time accounting the ISSUE's
+        acceptance asserts on: per-device table bytes n·d/S + C·d and
+        remote-gather bytes per aggregation call."""
+        from repro.kernels.neighbor_agg.ops import build_featshard_plan
+        pkey = key + (cfg.feat_cache_rows,)
+        pcache = getattr(graph, "_featshard_plan_cache", None)
+        if pcache is None:
+            pcache = {}
+            object.__setattr__(graph, "_featshard_plan_cache", pcache)
+        if pkey not in pcache:
+            # one-resident-key eviction like the ELL cache: cached steps
+            # that closed over an evicted plan keep it alive themselves
+            pcache.clear()
+            idx_h, w_h, _ = to_ell(graph, max_deg=self.max_deg)
+            pad = (-graph.n) % n_dev
+            if pad:
+                idx_h = np.pad(idx_h, ((0, pad), (0, 0)))
+                w_h = np.pad(w_h, ((0, pad), (0, 0)))
+            pcache[pkey] = build_featshard_plan(
+                idx_h, w_h, graph.degrees, mesh,
+                cache_rows=cfg.feat_cache_rows)
+        fsplan = pcache[pkey]
+        d = graph.feats.shape[1]
+        item = 2 if cfg.dtype == "bfloat16" else graph.feats.dtype.itemsize
+        st = dict(fsplan.stats)
+        st["feat_table_bytes_per_device"] = \
+            fsplan.table_bytes_per_device(d, item)
+        st["feat_remote_gather_bytes"] = fsplan.remote_bytes_per_call(
+            d, item)
+        self.featshard_stats = st
+        return fsplan
+
     @staticmethod
     def _loss_impl(params, batch, consts, cfg: GNNConfig):
-        idx, w, w_self, feats, labels, train_nodes, mesh = consts
+        idx, w, w_self, feats, labels, train_nodes, mesh, fsplan = consts
         logits = G.full_graph_forward(params, cfg, feats, idx, w, w_self,
-                                      mesh=mesh)
+                                      mesh=mesh, feats_plan=fsplan)
         lt = logits[train_nodes]
         return G.gnn_loss(lt, labels[train_nodes], cfg.loss,
                           cfg.n_classes)
 
     def loss_consts(self):
-        # the mesh rides along as a (static, closed-over) const so the
-        # forward can shard_map the kernel path over the NODES axis;
-        # sh.node_mesh() is memoized, keeping the step-cache key (which
-        # hashes the consts' identity) stable across binds
-        return tuple(self.ell) + (self.train_nodes, self._mesh)
+        # the mesh and featshard plan ride along as (static, closed-over)
+        # consts so the forward can shard_map the kernel path over the
+        # NODES axis; sh.node_mesh() and the per-graph plan cache are
+        # memoized, keeping the step-cache key (which hashes the consts'
+        # identity) stable across binds
+        return tuple(self.ell) + (self.train_nodes, self._mesh,
+                                  self.feats_plan)
 
     def node_split(self, which: str):
         if which not in self._splits:
@@ -1017,7 +1066,27 @@ class ShardedSampledSource(SampledSource):
         self._repl = sh.named((None,), mesh)
         self._row_shardings: dict = {}
         self._repl_splits: dict = {}
+        # feats_layout="sharded": sampled fan-outs change every step, so
+        # the hot set is the LRU variant — a host-side cache model over
+        # the per-batch source-node ids (counted on the Prefetcher
+        # worker, surfaced through History.counters / bench columns)
+        self.feat_cache = None
+        if cfg.feats_layout == "sharded":
+            from repro.core.featcache import (LRURowCache,
+                                              resolve_cache_rows)
+            self.feat_cache = LRURowCache(
+                resolve_cache_rows(cfg.feat_cache_rows, graph.n),
+                row_bytes=graph.feats.shape[1]
+                * graph.feats.dtype.itemsize)
         return self
+
+    def _host_batch(self, graph, fb):
+        if self.feat_cache is not None:
+            # single-threaded by construction: one Prefetcher worker (or
+            # inline when prefetch is off) stages every batch in order
+            for ids in fb.nodes:
+                self.feat_cache.lookup(ids.reshape(-1))
+        return super()._host_batch(graph, fb)
 
     @staticmethod
     def _loss_impl(params, batch, consts, cfg: GNNConfig):
@@ -1305,6 +1374,17 @@ class HistoryCallback(Callback):
             state.history.full_losses.append(fl)
             state.history.full_loss_iters.append(state.it + 1)
 
+    def on_train_end(self, state):
+        # feature-shard / hot-cache accounting: bind-time plan stats
+        # (full-graph) or the host LRU's run totals (sampled) land as
+        # run-level counters next to the per-iteration series
+        st = getattr(state.source, "featshard_stats", None)
+        if st:
+            state.history.counters.update(st)
+        fc = getattr(state.source, "feat_cache", None)
+        if fc is not None:
+            state.history.counters.update(fc.stats())
+
 
 class EarlyStop(Callback):
     """The loops' stop rules: batch loss <= target_loss (checked every
@@ -1426,6 +1506,9 @@ class Trainer:
         # module-level jit cache entries stay shared with plain sources)
         self._agg_mesh = (getattr(self.source, "_mesh", None)
                           if cfg.use_agg_kernel else None)
+        # featshard sources: eval/full-loss reuse the bind-time plan so
+        # they run on the same NODES-sharded table as the step
+        self._feats_plan = getattr(self.source, "feats_plan", None)
 
         if type(self.source)._loss_impl is not None:
             # built-in sources: one compiled step per (source type,
@@ -1452,12 +1535,13 @@ class Trainer:
     def _eval_dev(self, params, nodes):
         idx, w, w_self, feats, labels = self._ell
         return _eval_acc(params, self._scfg, idx, w, w_self, feats,
-                         labels, nodes, self._agg_mesh)
+                         labels, nodes, self._agg_mesh, self._feats_plan)
 
     def _full_loss_dev(self, params):
         return _cached_full_loss(self.graph, self.cfg, self._ell,
                                  self.source.node_split("train"),
-                                 mesh=self._agg_mesh)(params)
+                                 mesh=self._agg_mesh,
+                                 feats_plan=self._feats_plan)(params)
 
     def evaluate(self, params, nodes) -> float:
         return float(self._eval_dev(params, jnp.asarray(nodes)))

@@ -447,6 +447,17 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
                     help="run every grid point through the Pallas "
                          "aggregation kernel (interpret mode — works on "
                          "CPU and on multi-device meshes via shard_map)")
+    ap.add_argument("--feats-layout", default="replicated",
+                    choices=["replicated", "sharded"],
+                    help="gather-source table layout for the kernel "
+                         "paths: 'sharded' rows the feature table over "
+                         "the NODES mesh axis with a degree-ordered hot "
+                         "cache (full-graph) / host LRU accounting "
+                         "(sampled) — pair with --kernel and a "
+                         "multi-device mesh")
+    ap.add_argument("--cache-rows", type=int, default=-1,
+                    help="hot-cache size C for --feats-layout sharded "
+                         "(-1 auto = n//8, 0 off)")
     ap.add_argument("--journal", default=None,
                     help="JSONL completion journal: crash-safe sweeps "
                          "— rerunning with the same path skips points "
@@ -464,7 +475,9 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
                     feat_dim=graph.feats.shape[1], hidden=32,
                     n_classes=graph.n_classes, n_layers=args.layers,
                     fanout=(5,) * args.layers, batch_size=64, loss="ce",
-                    use_agg_kernel=args.kernel, agg_interpret=True)
+                    use_agg_kernel=args.kernel, agg_interpret=True,
+                    feats_layout=args.feats_layout,
+                    feat_cache_rows=args.cache_rows)
     plan = TrainPlan(lr=args.lr, n_iters=args.iters,
                      eval_every=args.eval_every)
     fo = (tuple(args.fanout) * args.layers if len(args.fanout) == 1

@@ -163,7 +163,8 @@ def _apply_layer(cfg: GNNConfig, p, h_self, h_nb, mask, w_edge, w_self,
 # ---------------------------------------------------------------------------
 
 def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
-                       w_self, mesh=None, return_layers=False):
+                       w_self, mesh=None, feats_plan=None,
+                       return_layers=False):
     """feats [n, r]; ell_idx/ell_w [n, K]; w_self [n] -> logits [n, C].
 
     Distributed-execution shape (§Perf H1, measured in EXPERIMENTS.md):
@@ -188,6 +189,18 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
     replicates, and the VJP psum-reduces the table gradient; the einsum
     path ignores it (GSPMD partitions that one by itself).
 
+    ``feats_plan`` (a ``FeatShardPlan``, built per bind by the sharded
+    sources under ``cfg.feats_layout == "sharded"``) switches the
+    gcn/graphsage kernel path to ``neighbor_agg_featshard``: the source
+    table is constrained NODES-row-sharded instead of replicated — no
+    device ever holds the full [n, d] table — with the plan's
+    degree-ordered hot cache splitting the gather into shard-local hits
+    and one compacted cold-miss all_gather.  Every layer's output table
+    stays NODES-sharded, so it feeds the next layer (and the layer-wise
+    inference pass) without a relayout.  GAT ignores the plan (its
+    attention gather is not a weighted sum; engine binds never build a
+    plan for it).
+
     ``return_layers`` additionally returns every layer's POST-activation
     table ``[h_1, ..., h_L]`` (``h_L`` = the logits) — the per-layer
     oracle ``core.inference`` validates its layer-wise path against.
@@ -200,21 +213,34 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
     mask = (ell_w > 0).astype(h.dtype)
     agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
     n_layers = len(params)
+    fs_active = (feats_plan is not None and cfg.use_agg_kernel
+                 and cfg.model in ("gcn", "graphsage"))
+    tab_axes = (sh.NODES, None) if fs_active else (None, None)
 
     def replicate(src):
-        return sh.constrain(src.astype(agg_dt), (None, None))
+        """Cast + constrain the per-layer gather source ONCE; every
+        consumer (aggregation, gather, fused self branch) shares the
+        result, so each layer emits a single table constraint.  Under a
+        feats_plan the "replicated" name is historical: the constraint
+        is NODES-row-sharded and no full copy exists anywhere."""
+        return sh.constrain(src.astype(agg_dt), tab_axes)
 
-    def gather(src):
-        return jnp.take(replicate(src), ell_idx, axis=0)      # local gather
-
-    def agg_w(src, w_edge):
-        """Σ_k w_edge[n,k] · src[ell_idx[n,k]] without the [n,K,d] blowup."""
+    def agg_w(srcr, w_edge):
+        """Σ_k w_edge[n,k] · srcr[ell_idx[n,k]] without the [n,K,d]
+        blowup; ``srcr`` is the already cast+constrained table."""
+        if fs_active:
+            from repro.kernels.neighbor_agg.ops import neighbor_agg_featshard
+            return neighbor_agg_featshard(
+                srcr, w_edge.astype(agg_dt), feats_plan,
+                interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
+                d_tile=cfg.agg_d_tile,
+                k_slab=cfg.agg_k_slab).astype(h.dtype)
         if cfg.use_agg_kernel:
-            return _kernel_agg(cfg, replicate(src), ell_idx,
+            return _kernel_agg(cfg, srcr, ell_idx,
                                w_edge.astype(agg_dt),
                                mesh=mesh).astype(h.dtype)
         return jnp.einsum("nk,nkd->nd", w_edge.astype(agg_dt),
-                          gather(src)).astype(h.dtype)
+                          jnp.take(srcr, ell_idx, axis=0)).astype(h.dtype)
 
     layers = []
     for li, p in enumerate(params):
@@ -223,26 +249,40 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
             w = p["w"]
             pre = w.shape[1] < h.shape[1]
             src = (h @ w) if pre else h
+            srcr = replicate(src)
             if cfg.use_agg_kernel:
                 # fused epilogue: the self row IS the source table row b,
-                # so the kernel consumes the same replicated table twice
-                srcr = replicate(src)
-                agg = _kernel_agg(cfg, srcr, ell_idx,
-                                  ell_w.astype(agg_dt), self_rows=srcr,
-                                  w_self=w_self.astype(agg_dt),
-                                  mesh=mesh).astype(h.dtype)
+                # so the kernel consumes the same constrained table twice
+                if fs_active:
+                    from repro.kernels.neighbor_agg.ops import \
+                        neighbor_agg_featshard
+                    agg = neighbor_agg_featshard(
+                        srcr, ell_w.astype(agg_dt), feats_plan,
+                        self_rows=srcr, w_self=w_self.astype(agg_dt),
+                        interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
+                        d_tile=cfg.agg_d_tile,
+                        k_slab=cfg.agg_k_slab).astype(h.dtype)
+                else:
+                    agg = _kernel_agg(cfg, srcr, ell_idx,
+                                      ell_w.astype(agg_dt), self_rows=srcr,
+                                      w_self=w_self.astype(agg_dt),
+                                      mesh=mesh).astype(h.dtype)
             else:
-                agg = agg_w(src, ell_w) + w_self[:, None] * src
+                # the self branch rides the SAME cast table as agg_w
+                # (one constraint per layer, matching the fused kernel's
+                # operand plumbing)
+                agg = agg_w(srcr, ell_w) + (w_self.astype(agg_dt)[:, None]
+                                            * srcr).astype(h.dtype)
             out = agg if pre else agg @ w
         elif cfg.model == "graphsage":
             wn = p["w_neigh"]
             pre = wn.shape[1] < h.shape[1]
             src = (h @ wn) if pre else h
             cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
-            mean = agg_w(src, mask) / cnt
+            mean = agg_w(replicate(src), mask) / cnt
             out = h @ p["w_self"] + (mean if pre else mean @ wn)
         else:  # gat — gathers the (usually narrower) projected z already
-            nb = gather(h).astype(h.dtype)
+            nb = jnp.take(replicate(h), ell_idx, axis=0).astype(h.dtype)
             out = _gat_layer(p, h, nb, mask.astype(bool))
             if last:
                 heads = cfg.gat_heads

@@ -125,6 +125,40 @@ def _chunk_apply(cfg: GNNConfig, last: bool, mesh, p, h, src, rows, idx,
     return out if last else jax.nn.relu(out)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _featshard_layer(cfg: GNNConfig, last: bool, fsplan, p, h, w, w_self):
+    """One FULL layer over the NODES-sharded table (feats_layout =
+    "sharded"): no chunk loop and no replicated source anywhere — the
+    whole [n_pad, d] table stays row-sharded, layer l's output feeds
+    layer l+1 in place (the ISSUE's "layer tables stay NODES-sharded"
+    serving requirement).  Mirrors ``full_graph_forward``'s gcn /
+    graphsage bodies through ``neighbor_agg_featshard``; ``fsplan`` is
+    the identity-hashed static plan for THIS ell/mesh."""
+    from repro.kernels.neighbor_agg.ops import neighbor_agg_featshard
+    agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
+    kw = dict(interpret=cfg.agg_interpret, b_tile=cfg.agg_b_tile,
+              d_tile=cfg.agg_d_tile, k_slab=cfg.agg_k_slab)
+    if cfg.model == "gcn":
+        wmat = p["w"]
+        pre = wmat.shape[1] < h.shape[1]
+        srcr = ((h @ wmat) if pre else h).astype(agg_dt)
+        agg = neighbor_agg_featshard(
+            srcr, w.astype(agg_dt), fsplan, self_rows=srcr,
+            w_self=w_self.astype(agg_dt), **kw).astype(h.dtype)
+        out = agg if pre else agg @ wmat
+    else:  # graphsage
+        wn = p["w_neigh"]
+        pre = wn.shape[1] < h.shape[1]
+        src = (h @ wn) if pre else h
+        mask = (w > 0).astype(h.dtype)
+        cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        mean = neighbor_agg_featshard(
+            src.astype(agg_dt), mask.astype(agg_dt), fsplan,
+            **kw).astype(h.dtype) / cnt
+        out = h @ p["w_self"] + (mean if pre else mean @ wn)
+    return out if last else jax.nn.relu(out)
+
+
 # ---------------------------------------------------------------------------
 # Chunk staging pipeline (Prefetcher + HostStagingRing reuse)
 # ---------------------------------------------------------------------------
@@ -233,10 +267,73 @@ class InferenceRun:
         return self.layers[-1]
 
 
+def _featshard_run(params, scfg: GNNConfig, feats, ell,
+                   fsplan) -> InferenceRun:
+    """The featshard inference pass: per-layer tables NODES-sharded over
+    ``fsplan.mesh`` end-to-end.  No chunk stream — the plan already
+    splits every row's gather into shard-local hits and one compacted
+    cold all_gather, so each layer is ONE sharded device step and the
+    per-device high-water mark is O(n·d / S + C·d), never a full
+    table."""
+    from repro import sharding as sh
+    if scfg.model not in ("gcn", "graphsage") or not scfg.use_agg_kernel:
+        raise ValueError(
+            "featshard inference needs use_agg_kernel=True and a "
+            f"gcn/graphsage model, got model={scfg.model!r}, "
+            f"use_agg_kernel={scfg.use_agg_kernel} (GAT's attention "
+            "gather is not a weighted sum — use the chunked path)")
+    idx, w, w_self = ell
+    n = int(feats.shape[0])
+    pad = fsplan.n_pad - n
+    if pad < 0 or w.shape != (n, fsplan.K):
+        raise ValueError(
+            f"featshard inference: ELL shape {w.shape} does not match "
+            f"the plan (n_pad={fsplan.n_pad}, K={fsplan.K}) — build the "
+            f"plan from THIS ell/mesh (layerwise_embeddings does)")
+    feats = np.asarray(feats)
+    if pad:                      # zero rows/weights: aggregate to zero
+        feats = np.pad(feats, ((0, pad), (0, 0)))
+        w = np.pad(w, ((0, pad), (0, 0)))
+        w_self = np.pad(w_self, (0, pad))
+    mesh = fsplan.mesh
+    rows2 = sh.named((sh.NODES, None), mesh)
+    row1 = sh.named((sh.NODES,), mesh)
+    h = jax.device_put(np.ascontiguousarray(feats), rows2)
+    w_d = jax.device_put(np.ascontiguousarray(w), rows2)
+    ws_d = jax.device_put(np.ascontiguousarray(w_self), row1)
+    layers: List[jax.Array] = []
+    per_layer: List[float] = []
+    t0 = time.perf_counter()
+    for li, p in enumerate(params):
+        lt0 = time.perf_counter()
+        last = li == len(params) - 1
+        h = _featshard_layer(scfg, last, fsplan, p, h, w_d, ws_d)
+        jax.block_until_ready(h)
+        # h itself stays padded + NODES-sharded for the next layer; the
+        # returned table is trimmed to the real rows
+        layers.append(h[:n] if pad else h)
+        per_layer.append(round(time.perf_counter() - lt0, 6))
+    total = time.perf_counter() - t0
+    d = feats.shape[1]
+    item = 2 if scfg.dtype == "bfloat16" else np.dtype(feats.dtype).itemsize
+    stats = {
+        "n_nodes": n, "n_layers": len(params), "chunk_size": n,
+        "n_chunks": 1, "chunk_steps": len(params),
+        "total_s": round(total, 6), "per_layer_s": per_layer,
+        "ms_per_node": round(1000.0 * total / n, 6),
+        "feat_table_bytes_per_device": fsplan.table_bytes_per_device(
+            d, item),
+        "feat_remote_gather_bytes": fsplan.remote_bytes_per_call(d, item),
+        **fsplan.stats,
+    }
+    return InferenceRun(layers=layers, stats=stats)
+
+
 def layerwise_layers(params, cfg: GNNConfig, feats,
                      ell: Tuple[np.ndarray, np.ndarray, np.ndarray], *,
                      chunk_size: int = 1024, mesh=None,
-                     prefetch: bool = True) -> InferenceRun:
+                     prefetch: bool = True, feats_plan=None
+                     ) -> InferenceRun:
     """Layer-wise inference over host ELL arrays ``(idx, w, w_self)``.
 
     Per layer: the (optional) width-shrinking pre-transform runs ONCE on
@@ -244,8 +341,15 @@ def layerwise_layers(params, cfg: GNNConfig, feats,
     the configured kernel/einsum path; the concatenated rows become the
     next layer's table.  Memory high-water mark is O(n · d) tables plus
     one [chunk, K, d] gather — never the [n, K, d] blowup, and never the
-    exponential fan-out tree."""
+    exponential fan-out tree.
+
+    ``feats_plan`` (a ``FeatShardPlan`` built from THIS ell) switches to
+    the NODES-sharded table pass (``_featshard_run``): chunking and
+    ``mesh`` are ignored — the plan's mesh partitions everything and
+    every per-layer table stays row-sharded."""
     scfg = _static_cfg(cfg)
+    if feats_plan is not None:
+        return _featshard_run(params, scfg, feats, ell, feats_plan)
     n = int(feats.shape[0])
     if n == 0:
         raise ValueError("layerwise_layers: empty graph (n=0)")
@@ -292,14 +396,32 @@ def layerwise_layers(params, cfg: GNNConfig, feats,
 def layerwise_embeddings(params, cfg: GNNConfig, graph: Graph, *,
                          max_deg: Optional[int] = None,
                          chunk_size: int = 1024, mesh=None,
-                         prefetch: bool = True) -> InferenceRun:
+                         prefetch: bool = True,
+                         feats_plan=None) -> InferenceRun:
     """Layer-wise inference straight from a ``Graph`` (ELL derived here;
     ``max_deg=None`` keeps ALL neighbors — inference uses the full
-    neighborhood, §4.1)."""
+    neighborhood, §4.1).  Under ``cfg.feats_layout == "sharded"`` with
+    the kernel on and a ``mesh``, a featshard plan is built from this
+    inference ELL (NOT reused from training — the full neighborhood has
+    its own K) and the NODES-sharded table pass runs instead of the
+    chunk stream."""
     ell = to_ell(graph, max_deg=max_deg)
+    if (feats_plan is None and cfg.feats_layout == "sharded"
+            and cfg.use_agg_kernel and mesh is not None
+            and cfg.model in ("gcn", "graphsage")):
+        from repro import sharding as sh
+        from repro.kernels.neighbor_agg.ops import build_featshard_plan
+        idx, w, _ = ell
+        pad = (-graph.n) % sh.nodes_shards(mesh)
+        if pad:
+            idx = np.pad(idx, ((0, pad), (0, 0)))
+            w = np.pad(w, ((0, pad), (0, 0)))
+        feats_plan = build_featshard_plan(
+            idx, w, graph.degrees, mesh,
+            cache_rows=cfg.feat_cache_rows)
     return layerwise_layers(params, cfg, graph.feats, ell,
                             chunk_size=chunk_size, mesh=mesh,
-                            prefetch=prefetch)
+                            prefetch=prefetch, feats_plan=feats_plan)
 
 
 def layerwise_logits(params, cfg: GNNConfig, graph: Graph,

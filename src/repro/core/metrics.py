@@ -21,6 +21,10 @@ class History:
     #: 1-based iterations whose step produced a non-finite loss/grad and
     #: was skipped/rolled back by the engine's BadStepPolicy
     bad_steps: List[int] = dataclasses.field(default_factory=list)
+    #: run-level scalar counters (not per-iteration): the feature-shard /
+    #: hot-cache accounting (hit rate, remote-gather bytes, per-device
+    #: table bytes) lands here at train end (HistoryCallback)
+    counters: dict = dataclasses.field(default_factory=dict)
     _t0: Optional[float] = None
 
     def start(self):
@@ -32,16 +36,19 @@ class History:
         through ``json`` (repr-based), so a resumed run's restored
         History compares bit-for-bit with the uninterrupted one —
         except ``times``, which restart from the resume wall-clock."""
-        return {f.name: list(getattr(self, f.name))
+        return {f.name: (dict(v) if isinstance(v, dict) else list(v))
                 for f in dataclasses.fields(self)
-                if not f.name.startswith("_")}
+                if not f.name.startswith("_")
+                for v in (getattr(self, f.name),)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "History":
         h = cls()
         for f in dataclasses.fields(cls):
             if not f.name.startswith("_") and f.name in d:
-                setattr(h, f.name, list(d[f.name]))
+                v = d[f.name]
+                setattr(h, f.name, dict(v) if isinstance(v, dict)
+                        else list(v))
         return h
 
     def record(self, loss: float, val_acc: Optional[float] = None,

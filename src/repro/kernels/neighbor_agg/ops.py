@@ -370,6 +370,15 @@ def _agg_batch_sharded_bwd(sstatic, res, g):
 _agg_batch_sharded.defvjp(_agg_batch_sharded_fwd, _agg_batch_sharded_bwd)
 
 
+# -- NODES-sharded feature table + degree-ordered hot cache -----------------
+# The out-of-core entry point: no replicated [n, d] table anywhere.  Kept
+# in its own module (featshard.py); re-exported here so callers keep one
+# import surface for every neighbor-agg front-end.
+from repro.kernels.neighbor_agg.featshard import (  # noqa: E402
+    FeatShardPlan, build_featshard_plan, neighbor_agg_featshard,
+    resolve_cache_rows)
+
+
 def neighbor_agg_batch_sharded(w, h_nb, h_self=None, w_self=None, *, mesh,
                                interpret: bool = True, d_tile: int = 128,
                                b_tile: int = 8, k_slab: int = 4):

@@ -181,14 +181,47 @@ def ell_agg_specs(mesh: Mesh, fused: bool) -> Tuple[Tuple[P, ...], P]:
     return ins, row2
 
 
+def row_owner(n_pad: int, mesh: Mesh) -> np.ndarray:
+    """Host-side owner map for an [n_pad, ...] NODES-row-sharded table:
+    ``owner[i]`` is the NODES shard holding row ``i`` (jax lays a
+    row-sharded array out as contiguous blocks of ``n_pad / shards``
+    rows, which is exactly what the featshard plan classifies against;
+    see kernels/neighbor_agg/featshard.py)."""
+    n_sh = nodes_shards(mesh)
+    if n_pad % n_sh:
+        raise ValueError(
+            f"row_owner: n_pad={n_pad} rows must divide the {n_sh} NODES "
+            f"shards (pad first)")
+    return (np.arange(n_pad) // (n_pad // n_sh)).astype(np.int32)
+
+
+def feats_spec(mesh: Mesh, layout: str = "replicated") -> P:
+    """PartitionSpec of the gather-source feature table under a
+    ``GNNConfig.feats_layout``: ``"replicated"`` is the PR-5 sharded
+    kernel's layout (every shard holds the full [n, d] table),
+    ``"sharded"`` rows the table over NODES — P("nodes"->mesh axes, None)
+    — for the out-of-core featshard path."""
+    if layout == "sharded":
+        return P(nodes_axis(mesh), None)
+    if layout != "replicated":
+        raise ValueError(f"unknown feats_layout: {layout!r}")
+    return P(None, None)
+
+
 def constrain(x, logical: Sequence[Optional[str]]):
     """with_sharding_constraint against the activated mesh; no-op when no
-    mesh is active (smoke tests) or when dims don't divide (e.g. batch=1
-    decode)."""
+    mesh is active (smoke tests) or when the spec can't bind to the
+    active mesh."""
     if _ACTIVE_MESH is None:
         return x
     try:
         spec = resolve(logical, _ACTIVE_MESH)
         return jax.lax.with_sharding_constraint(x, spec)
-    except Exception:
+    except (ValueError, TypeError):
+        # jax 0.4.x raises ValueError when the resolved spec names a mesh
+        # axis the active mesh doesn't have (smoke meshes without a
+        # "model" axis) or when the spec's rank disagrees with the array;
+        # jax >= 0.5 surfaces sharding/axis-type mismatches from the new
+        # mesh machinery as TypeError.  Anything else (tracer leaks,
+        # internal errors) should propagate, not be eaten.
         return x

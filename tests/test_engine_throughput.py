@@ -298,8 +298,9 @@ def test_bench_engine_run_variant_measures_both_paradigms():
 
 
 def test_bench_engine_gate_semantics(tmp_path, monkeypatch):
-    """The gate: fails on a >tol steps/s regression, NEVER rewrites the
-    baseline in --check mode, skips size-mismatched baselines, and
+    """The gate: fails on a >tol steps/s regression, never rewrites the
+    baseline in --check mode without --promote, never leaves a stale
+    ``.new`` side file behind, skips size-mismatched baselines, and
     ignores the noisy interpret-kernel cells."""
     bench_engine = _import_bench_engine()
     fake_rows = [
@@ -311,6 +312,7 @@ def test_bench_engine_gate_semantics(tmp_path, monkeypatch):
     monkeypatch.setattr(bench_engine, "run",
                         lambda smoke=True: [dict(r) for r in fake_rows])
     out = tmp_path / "b.json"
+    side = tmp_path / "b.json.new"
     base = {"smoke": True, "rows": [
         {"variant": "x", "kernel": 0, "steady_steps_per_s": 100.0},
         {"variant": "x+kernel", "kernel": 1,
@@ -319,13 +321,26 @@ def test_bench_engine_gate_semantics(tmp_path, monkeypatch):
     rc = bench_engine.main(["--smoke", "--check", "--out", str(out)])
     assert rc == 1
     assert json.loads(out.read_text()) == base      # baseline intact
-    assert (tmp_path / "b.json.new").exists()       # fresh rows beside it
+    assert not side.exists()                        # no stale side file
+    # a red gate must not promote even when asked to
+    rc = bench_engine.main(["--smoke", "--check", "--promote",
+                            "--out", str(out)])
+    assert rc == 1
+    assert json.loads(out.read_text()) == base
+    assert not side.exists()
     # kernel-cell regressions alone do not fire the gate
     base["rows"][1]["steady_steps_per_s"] = 1000.0
     base["rows"][0]["steady_steps_per_s"] = 10.0
     out.write_text(json.dumps(base))
     assert bench_engine.main(["--smoke", "--check",
                               "--out", str(out)]) == 0
+    assert json.loads(out.read_text()) == base      # pass w/o --promote:
+    assert not side.exists()                        # baseline untouched
+    # green gate + --promote: fresh rows replace the baseline atomically
+    assert bench_engine.main(["--smoke", "--check", "--promote",
+                              "--out", str(out)]) == 0
+    assert json.loads(out.read_text())["rows"] == fake_rows
+    assert not side.exists()
     # a full-size baseline is incomparable: gate skips, run passes
     base["smoke"] = False
     base["rows"][0]["steady_steps_per_s"] = 100.0
