@@ -1,11 +1,24 @@
-.PHONY: check test bench-quick bench-engine bench-engine-baseline \
-	bench-promote sweep-smoke serve-smoke chaos
+.PHONY: check test analyze analyze-fixtures bench-quick bench-engine \
+	bench-engine-baseline bench-promote sweep-smoke serve-smoke chaos
 
 check:
 	bash scripts/ci.sh
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# static audit (jaxpr / pallas / thread checkers); nonzero iff a gating
+# finding survives analysis/allowlist.toml.  Traced jaxprs are cached
+# by source digest, so an unchanged tree re-checks in seconds.
+analyze:
+	python scripts/analyze.py --json
+
+# self-test: each seeded-broken fixture MUST make the gate fire
+analyze-fixtures:
+	! python scripts/analyze.py --fixture dma
+	! python scripts/analyze.py --fixture constant
+	! python scripts/analyze.py --fixture f64
+	! python scripts/analyze.py --fixture thread
 
 bench-quick:
 	PYTHONPATH=src:. python benchmarks/bench_kernel.py --quick

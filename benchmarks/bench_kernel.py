@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_rows, write_csv
+from repro.analysis.pallas_audit import row_agg_budget, tiled_agg_budget
 from repro.kernels.neighbor_agg.ops import neighbor_agg
 
 _DMA_GRAIN = 32          # min HBM read granularity per distinct load, bytes
@@ -40,6 +41,14 @@ _DMA_GRAIN = 32          # min HBM read granularity per distinct load, bytes
 # one set of tile constants feeds BOTH the kernel invocation and the
 # bytes accounting, so retuning can't silently desync them
 B_TILE, D_TILE, K_SLAB = 8, 128, 4
+
+# per-step VMEM working set from the SAME budget model `make analyze`
+# gates against the backend limit (analysis/pallas_audit.py) — keeping
+# the bench and the checker on one formula
+_VMEM_BYTES = {
+    "row": sum(row_agg_budget(D_TILE).values()),
+    "tiled": sum(tiled_agg_budget(B_TILE, D_TILE, K_SLAB).values()),
+}
 
 
 def _accounting(kernel, n, d, b, k, itemsize=4,
@@ -109,6 +118,7 @@ def run(quick: bool = True, seed: int = 0):
                 "jnp_us_per_call": round(t_ref * 1e6, 1),
                 "kernel_max_err": err,
                 "flops": int(flops),
+                "vmem_bytes": _VMEM_BYTES[kernel],
                 **acct,
                 "arithmetic_intensity": round(flops / acct["bytes_moved"],
                                               3),

@@ -11,6 +11,11 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== static audit (jaxpr / pallas / thread checkers + the seeded =="
+echo "== broken-fixture self-test; traced jaxprs cached by src digest) =="
+make analyze
+make analyze-fixtures
+
 echo "== kernel micro-bench (quick) =="
 python benchmarks/bench_kernel.py --quick
 

@@ -1,0 +1,26 @@
+"""repro.analysis — static audit pass over the repo's three hazard
+surfaces (ISSUE 9):
+
+* :mod:`repro.analysis.jaxpr_audit` — trace the engine-bound
+  step/eval/inference functions for every committed sweep variant and
+  walk the jaxprs for dtype widenings, convert churn, host-constant
+  capture, stray collectives, donation feasibility, and retrace
+  stability.
+* :mod:`repro.analysis.pallas_audit` — VMEM budgets from block/scratch
+  shapes, DMA/semaphore pairing on every control path of the two-slot
+  K-slab rotation, and bounds checks on scalar-prefetched indices.
+* :mod:`repro.analysis.thread_audit` — AST concurrency lint over the
+  thread-crossing modules (prefetch/engine/serving/featcache/
+  inference): shared attributes written from two thread sides without
+  lock/queue/ring discipline.
+
+Run it via ``scripts/analyze.py`` / ``make analyze`` (CI-gated); the
+intentional exceptions live in ``src/repro/analysis/allowlist.toml``.
+"""
+from .findings import (GATING, Finding, apply_allowlist, as_json, gating,
+                       load_allowlist, render_report)
+
+__all__ = [
+    "Finding", "GATING", "apply_allowlist", "as_json", "gating",
+    "load_allowlist", "render_report",
+]

@@ -1,0 +1,344 @@
+"""Concurrency lint: which threads touch which attributes.
+
+An AST pass over the thread-crossing modules (``prefetch.py``,
+``engine.py`` with its HostStagingRing usage, ``serving.py``,
+``featcache.py``, ``inference.py``).  Per class it derives:
+
+- **thread-entry methods**: targets of ``threading.Thread(target=
+  self.m)`` plus methods handed to a ``Prefetcher`` as ``payload_fn=`` /
+  ``sample_fn=`` (those run on the prefetch worker), closed over the
+  intra-class ``self.m()`` call graph;
+- per method, the ``self.<attr>`` **reads**, **writes** (assign /
+  augassign / subscript store) and **mutating calls** (``.append`` /
+  ``.pop`` / ``move_to_end`` / ...), each tagged with whether it sits
+  inside a ``with self.<lock>:`` block;
+- **discipline attributes**: ``queue.Queue`` / ``threading.Event`` /
+  ``Lock`` / ``HostStagingRing`` instances assigned in ``__init__`` or
+  ``bind`` — calls on these are the designated thread-safe handoff and
+  are never flagged (rebinding them still counts as a write).
+
+Findings:
+
+- ``error`` — an attribute written (unlocked, non-discipline) from BOTH
+  a worker-side and a main-side method: a data race unless some
+  external protocol orders it.  This is the gate; intentional cases go
+  in ``allowlist.toml`` with a reason.
+- ``warning`` — a worker-side unlocked write to an attribute that a
+  main-side method also MUTATES through method calls (list/dict
+  mutation races that assignment-tracking alone would miss).
+- ``info`` — single-writer, cross-thread reader without a lock: the
+  deliberate lock-free handoffs (``Prefetcher._err`` is written before
+  the sentinel ``put`` whose matching ``get`` orders the read).
+  Report-only, so the committed allowlist stays near-empty.
+
+``__init__`` / ``bind`` writes are pre-thread setup and exempt.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+#: method names that mutate their receiver in place
+MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "add", "discard", "update", "setdefault", "move_to_end", "sort",
+    "reverse", "appendleft", "popleft", "fill",
+})
+
+#: constructor names whose instances ARE the designated cross-thread
+#: discipline (their methods synchronize internally)
+DISCIPLINE_TYPES = frozenset({
+    "Queue", "LifoQueue", "PriorityQueue", "SimpleQueue", "Event",
+    "Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore",
+    "Barrier", "HostStagingRing",
+})
+
+#: methods whose writes happen before any worker thread exists
+SETUP_METHODS = frozenset({"__init__", "bind"})
+
+#: keyword names that hand a bound method to the Prefetcher worker
+WORKER_CALLBACK_KWARGS = frozenset({"payload_fn", "sample_fn"})
+
+#: the thread-crossing modules this audit covers (relative to the
+#: ``repro`` package root)
+AUDITED_MODULES = (
+    "core/prefetch.py",
+    "core/engine.py",
+    "core/serving.py",
+    "core/featcache.py",
+    "core/inference.py",
+)
+
+
+class _Access:
+    __slots__ = ("kind", "attr", "method", "locked", "line")
+
+    def __init__(self, kind: str, attr: str, method: str, locked: bool,
+                 line: int):
+        self.kind = kind          # read | write | mutcall
+        self.attr = attr
+        self.method = method
+        self.locked = locked
+        self.line = line
+
+
+class _MethodVisitor(ast.NodeVisitor):
+    """Collect self.<attr> accesses in one method, tracking ``with
+    self.<attr>:`` nesting as lock protection."""
+
+    def __init__(self, method: str, self_name: str = "self"):
+        self.method = method
+        self.self_name = self_name
+        self.accesses: List[_Access] = []
+        self.calls: Set[str] = set()          # self.m() intra-class calls
+        self.callbacks: Set[str] = set()      # self.m passed as worker cb
+        self.thread_targets: Set[str] = set()  # Thread(target=self.m)
+        self._lock_depth = 0
+
+    # -- helpers -------------------------------------------------------
+    def _self_attr(self, node) -> Optional[str]:
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == self.self_name:
+            return node.attr
+        return None
+
+    def _rec(self, kind: str, attr: str, line: int) -> None:
+        self.accesses.append(_Access(kind, attr, self.method,
+                                     self._lock_depth > 0, line))
+
+    # -- visitors ------------------------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        held = any(self._self_attr(item.context_expr) is not None
+                   for item in node.items)
+        for item in node.items:
+            self.visit(item.context_expr)
+        if held:
+            self._lock_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        if held:
+            self._lock_depth -= 1
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = self._self_attr(node)
+        if attr is not None:
+            if isinstance(node.ctx, (ast.Store, ast.AugStore)
+                          if hasattr(ast, "AugStore") else ast.Store):
+                self._rec("write", attr, node.lineno)
+            elif isinstance(node.ctx, ast.Del):
+                self._rec("write", attr, node.lineno)
+            else:
+                self._rec("read", attr, node.lineno)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        attr = self._self_attr(node.target)
+        if attr is not None:
+            self._rec("write", attr, node.lineno)
+        elif isinstance(node.target, ast.Subscript):
+            base = self._self_attr(node.target.value)
+            if base is not None:
+                self._rec("mutcall", base, node.lineno)
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if isinstance(node.ctx, (ast.Store, ast.Del)):
+            base = self._self_attr(node.value)
+            if base is not None:       # self.x[k] = v mutates x in place
+                self._rec("mutcall", base, node.lineno)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        # self.m(...) — intra-class call edge
+        if isinstance(func, ast.Attribute):
+            recv = func.value
+            m = self._self_attr(recv)
+            if isinstance(recv, ast.Name) and recv.id == self.self_name:
+                self.calls.add(func.attr)
+            elif m is not None and func.attr in MUTATORS:
+                self._rec("mutcall", m, node.lineno)
+        # Thread(target=self.m) / Prefetcher(payload_fn=self.m, ...)
+        for kw in node.keywords:
+            tgt = self._self_attr(kw.value)
+            if tgt is None:
+                continue
+            if kw.arg == "target":
+                self.thread_targets.add(tgt)
+            elif kw.arg in WORKER_CALLBACK_KWARGS:
+                self.callbacks.add(tgt)
+        self.generic_visit(node)
+
+
+def _call_name(node) -> Optional[str]:
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name):
+            return f.id
+        if isinstance(f, ast.Attribute):
+            return f.attr
+    return None
+
+
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef, modname: str):
+        self.name = node.name
+        self.modname = modname
+        self.methods: Dict[str, _MethodVisitor] = {}
+        self.discipline: Set[str] = set()
+        for item in node.body:
+            if not isinstance(item, ast.FunctionDef):
+                continue
+            args = item.args.posonlyargs + item.args.args
+            self_name = args[0].arg if args else "self"
+            mv = _MethodVisitor(item.name, self_name)
+            for stmt in item.body:
+                mv.visit(stmt)
+            self.methods[item.name] = mv
+            if item.name in SETUP_METHODS:
+                for stmt in ast.walk(item):
+                    if isinstance(stmt, ast.Assign):
+                        cname = _call_name(stmt.value)
+                        if cname in DISCIPLINE_TYPES:
+                            for tgt in stmt.targets:
+                                a = mv._self_attr(tgt)
+                                if a is not None:
+                                    self.discipline.add(a)
+
+    # -- thread-side closure -------------------------------------------
+    def entries(self) -> Set[str]:
+        out: Set[str] = set()
+        for mv in self.methods.values():
+            out |= mv.thread_targets & self.methods.keys()
+            out |= mv.callbacks & self.methods.keys()
+        return out
+
+    def worker_side(self) -> Set[str]:
+        seen = set()
+        todo = list(self.entries())
+        while todo:
+            m = todo.pop()
+            if m in seen or m not in self.methods:
+                continue
+            seen.add(m)
+            todo += [c for c in self.methods[m].calls if c not in seen]
+        return seen
+
+    def audit(self) -> List[Finding]:
+        worker = self.worker_side()
+        if not worker:
+            return []
+        site_base = f"{self.modname}.{self.name}"
+        # attr -> {(side, kind, locked): [methods]}
+        per_attr: Dict[str, Dict[Tuple[str, str, bool], Set[str]]] = {}
+        for mname, mv in self.methods.items():
+            if mname in SETUP_METHODS:
+                continue
+            sides = set()
+            if mname in worker:
+                sides.add("worker")
+                # a worker-side method also invoked inline by a main-side
+                # method (the non-prefetch path) runs on BOTH threads
+                if self._also_called_from_main(mname, worker):
+                    sides.add("main")
+            else:
+                sides.add("main")
+            for acc in mv.accesses:
+                d = per_attr.setdefault(acc.attr, {})
+                for side in sides:
+                    d.setdefault((side, acc.kind, acc.locked),
+                                 set()).add(mname)
+        findings: List[Finding] = []
+        for attr, d in sorted(per_attr.items()):
+            if attr in self.discipline:
+                # calls on the discipline object are the handoff; only a
+                # REBIND from two sides would race, fold into writes
+                w_w = d.get(("worker", "write", False), set())
+                m_w = d.get(("main", "write", False), set())
+            else:
+                w_w = (d.get(("worker", "write", False), set())
+                       | d.get(("worker", "mutcall", False), set()))
+                m_w = (d.get(("main", "write", False), set())
+                       | d.get(("main", "mutcall", False), set()))
+            site = f"{site_base}.{attr}"
+            if w_w and m_w:
+                findings.append(Finding(
+                    "thread", "error", site,
+                    f"written without a lock from the worker side "
+                    f"({sorted(w_w)}) AND the main side ({sorted(m_w)}) "
+                    "— no queue/ring/lock discipline orders these "
+                    "writes"))
+                continue
+            if attr in self.discipline:
+                continue
+            m_mut = d.get(("main", "mutcall", False), set())
+            w_mut = d.get(("worker", "mutcall", False), set())
+            if (w_w and m_mut) or (m_w and w_mut):
+                findings.append(Finding(
+                    "thread", "warning", site,
+                    f"rebound on one thread ({sorted(w_w or m_w)}) while "
+                    f"mutated in place on the other "
+                    f"({sorted(m_mut or w_mut)})"))
+                continue
+            readers = (d.get(("main", "read", False), set())
+                       if w_w else d.get(("worker", "read", False), set())
+                       if m_w else set())
+            writers = w_w or m_w
+            readers -= writers
+            if writers and readers:
+                findings.append(Finding(
+                    "thread", "info", site,
+                    f"lock-free handoff: written by {sorted(writers)} on "
+                    f"one thread, read by {sorted(readers)} on the other "
+                    "— safe only if an existing queue put/get or join "
+                    "orders the access"))
+        return findings
+
+    def _also_called_from_main(self, mname: str, worker: Set[str]) -> bool:
+        """A worker-side method also invoked by a main-side method runs
+        on BOTH threads (e.g. the non-prefetch path calling the staging
+        callback inline)."""
+        if mname not in worker:
+            return False
+        return any(mname in mv.calls
+                   for other, mv in self.methods.items()
+                   if other not in worker and other not in SETUP_METHODS)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def analyze_source(src: str, modname: str) -> List[Finding]:
+    tree = ast.parse(src)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            findings += _ClassInfo(node, modname).audit()
+    return findings
+
+
+def analyze_file(path: str, modname: Optional[str] = None
+                 ) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    if modname is None:
+        modname = os.path.splitext(os.path.basename(path))[0]
+    return analyze_source(src, modname)
+
+
+def audit_threads() -> List[Finding]:
+    """The repo sweep over ``AUDITED_MODULES``."""
+    import repro
+    # repro is a namespace package (no __init__.py): __file__ is None
+    root = list(repro.__path__)[0]
+    findings: List[Finding] = []
+    for rel in AUDITED_MODULES:
+        path = os.path.join(root, rel)
+        modname = "repro." + rel[:-3].replace("/", ".")
+        findings += analyze_file(path, modname)
+    return findings

@@ -351,7 +351,13 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                                          paradigm=paradigm, b=b,
                                          fanouts=fo, inference=inference,
                                          serve_queries=serve_queries)
-                except Exception as e:
+                # Mosaic/Triton lowering failures surface as
+                # RuntimeError (XlaRuntimeError), NotImplementedError,
+                # or ValueError/TypeError from the pallas lowering
+                # rules — anything else is a training bug and must not
+                # enter the degrade path at all
+                except (RuntimeError, NotImplementedError, ValueError,
+                        TypeError) as e:
                     if not (cfg.use_agg_kernel and _is_pallas_failure(e)):
                         raise
                     warnings.warn(
@@ -368,9 +374,12 @@ def sweep(graph: Graph, cfg: GNNConfig, plan: TrainPlan,
                         inference=inference, serve_queries=serve_queries)
                     row["agg_kernel_degraded"] = True
             except Exception as e:
-                # without a journal this sweep is interactive: fail fast.
-                # With one it is a long unattended grid: isolate the
-                # point, record it, keep going (retried on resume).
+                # deliberately broad: without a journal this sweep is
+                # interactive — fail fast.  With one it is a long
+                # unattended grid: isolate ANY per-point failure,
+                # record it, keep going (retried on resume).  Injected
+                # faults (core.faults) derive from BaseException
+                # precisely so they still crash through this recovery.
                 if journal is None:
                     raise
                 row = {"paradigm": paradigm, "b": b,

@@ -210,8 +210,13 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
     from repro import sharding as sh
 
     h = feats
-    mask = (ell_w > 0).astype(h.dtype)
+    maskb = ell_w > 0
+    mask = maskb.astype(h.dtype)
     agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
+    # aggregation consumes the mask in agg_dt: cast the bool ONCE
+    # instead of round-tripping the f32 mask (bool->f32->bf16 was a
+    # second full [n, K] pass per layer under dtype="bfloat16")
+    mask_agg = mask if agg_dt == h.dtype else maskb.astype(agg_dt)
     n_layers = len(params)
     fs_active = (feats_plan is not None and cfg.use_agg_kernel
                  and cfg.model in ("gcn", "graphsage"))
@@ -279,11 +284,11 @@ def full_graph_forward(params, cfg: GNNConfig, feats, ell_idx, ell_w,
             pre = wn.shape[1] < h.shape[1]
             src = (h @ wn) if pre else h
             cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
-            mean = agg_w(replicate(src), mask) / cnt
+            mean = agg_w(replicate(src), mask_agg) / cnt
             out = h @ p["w_self"] + (mean if pre else mean @ wn)
         else:  # gat — gathers the (usually narrower) projected z already
             nb = jnp.take(replicate(h), ell_idx, axis=0).astype(h.dtype)
-            out = _gat_layer(p, h, nb, mask.astype(bool))
+            out = _gat_layer(p, h, nb, maskb)
             if last:
                 heads = cfg.gat_heads
                 out = out.reshape(out.shape[:-1] + (heads, -1)).mean(-2)

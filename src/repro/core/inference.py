@@ -83,7 +83,11 @@ def _chunk_apply(cfg: GNNConfig, last: bool, mesh, p, h, src, rows, idx,
     pass's compiled functions.
     """
     agg_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else h.dtype
-    mask = (w > 0).astype(h.dtype)
+    maskb = w > 0
+    mask = maskb.astype(h.dtype)
+    # cast the bool mask straight to agg_dt where aggregation consumes
+    # it — bool->f32->bf16 was a second full [c, K] pass under bf16
+    mask_agg = mask if agg_dt == h.dtype else maskb.astype(agg_dt)
 
     def agg_w(table, w_edge):
         t = table.astype(agg_dt)
@@ -112,13 +116,13 @@ def _chunk_apply(cfg: GNNConfig, last: bool, mesh, p, h, src, rows, idx,
         wn = p["w_neigh"]
         pre = wn.shape[1] < h.shape[1]
         cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
-        mean = agg_w(src, mask) / cnt
+        mean = agg_w(src, mask_agg) / cnt
         out = jnp.take(h, rows, axis=0) @ p["w_self"] \
             + (mean if pre else mean @ wn)
     else:  # gat — per-edge softmax attention stays on the einsum path
         h_rows = jnp.take(h, rows, axis=0)
         nb = jnp.take(h.astype(agg_dt), idx, axis=0).astype(h.dtype)
-        out = G._gat_layer(p, h_rows, nb, mask.astype(bool))
+        out = G._gat_layer(p, h_rows, nb, maskb)
         if last:
             heads = cfg.gat_heads
             out = out.reshape(out.shape[:-1] + (heads, -1)).mean(-2)
@@ -150,10 +154,13 @@ def _featshard_layer(cfg: GNNConfig, last: bool, fsplan, p, h, w, w_self):
         wn = p["w_neigh"]
         pre = wn.shape[1] < h.shape[1]
         src = (h @ wn) if pre else h
-        mask = (w > 0).astype(h.dtype)
+        maskb = w > 0
+        mask = maskb.astype(h.dtype)
         cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        # bool -> agg_dt directly (not via the f32 mask): one cast pass
+        mask_agg = mask if agg_dt == h.dtype else maskb.astype(agg_dt)
         mean = neighbor_agg_featshard(
-            src.astype(agg_dt), mask.astype(agg_dt), fsplan,
+            src.astype(agg_dt), mask_agg, fsplan,
             **kw).astype(h.dtype) / cnt
         out = h @ p["w_self"] + (mean if pre else mean @ wn)
     return out if last else jax.nn.relu(out)

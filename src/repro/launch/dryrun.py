@@ -208,7 +208,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             rec = dryrun_lm(arch, INPUT_SHAPES[shape_name], multi_pod)
         rec.update(meta)
         return rec
-    except Exception as e:  # noqa
+    except Exception as e:
+        # deliberately broad: the dry-run matrix records every
+        # arch x shape outcome side by side, so ANY per-cell failure
+        # becomes an "error" row instead of aborting the whole report
         return {**meta, "status": "error", "error": f"{type(e).__name__}: {e}",
                 "traceback": traceback.format_exc()[-2000:]}
 
