@@ -45,7 +45,8 @@ serve-smoke:
 
 chaos:
 	PYTHONPATH=src python -m pytest -x -q tests/test_chaos.py \
-	tests/test_checkpoint.py tests/test_resume.py
+	tests/test_checkpoint.py tests/test_resume.py \
+	tests/test_serving_chaos.py
 	PYTHONPATH=src python scripts/sweep_resume_smoke.py
 
 sweep-smoke:

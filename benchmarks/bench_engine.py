@@ -170,6 +170,78 @@ def run_inference_variant(graph, cfg, seed: int = 0, repeats: int = 2,
     }
 
 
+def run_serve_writes_variant(graph, cfg, seed: int = 0,
+                             serve_requests: int = 128,
+                             n_updates: int = 24,
+                             chunk_size: int = 128) -> Dict:
+    """Serving under write load (PR 10): a background writer streams
+    feature updates through the WAL while query clients hammer the
+    server; the row records answered queries/s, p99 latency, the max
+    served staleness and the refresh-budget accounting (scheduler vs
+    SLO-forced refreshes).  ``paradigm="inference"`` keeps the row
+    recorded-but-not-gated, like the other inference cells — wall-clock
+    under a concurrent writer is even noisier than the build loop."""
+    import threading
+    import time as _time
+
+    import numpy as np
+
+    from repro.core import gnn as G
+    from repro.core.embedding_store import EmbeddingStore
+    from repro.core.serving import GNNServer
+
+    params = G.init_gnn(jax.random.key(seed), cfg, graph.feats.shape[1])
+    store = EmbeddingStore(params, cfg, graph, chunk_size=chunk_size)
+    run = store.build()
+    rng = np.random.default_rng(seed)
+    server = GNNServer(store, max_batch=32, max_wait_ms=0.5,
+                       max_staleness_s=0.25, refresh_every_updates=4,
+                       refresh_budget_ms=50.0)
+    t0 = _time.monotonic()
+    try:
+        def writer():
+            for _ in range(n_updates):
+                nodes = rng.choice(graph.n, size=4, replace=False)
+                store.update_features(
+                    nodes, rng.normal(size=(4, graph.feats.shape[1]))
+                    .astype(np.float32))
+                _time.sleep(0.002)
+
+        wt = threading.Thread(target=writer)
+        wt.start()
+        futs = [server.submit(rng.integers(0, graph.n, size=8))
+                for _ in range(serve_requests)]
+        for f in futs:
+            f.result(timeout=120.0)
+        wt.join(timeout=60.0)
+    finally:
+        server.close()
+    total_s = _time.monotonic() - t0
+    st = server.stats()
+    rs = store.refresh_stats()
+    n_dev = len(jax.devices())
+    return {
+        "variant": f"serve+writes"
+                   f"{'+kernel' if cfg.use_agg_kernel else ''}"
+                   f"{f'@{n_dev}dev' if n_dev > 1 else ''}",
+        "paradigm": "inference",
+        "kernel": int(cfg.use_agg_kernel),
+        "fast_path": 1,
+        "devices": n_dev,
+        "iters": serve_requests,
+        "time_to_first_step_s": round(run.stats["total_s"], 4),
+        "steady_steps_per_s": round(serve_requests / max(total_s, 1e-9),
+                                    2),
+        "serve_q_per_s": round(st["qps"], 1),
+        "serve_p99_ms": round(st["p99_ms"], 4),
+        "staleness_max_s": round(st["staleness_max_s"], 4),
+        "snapshot_version": int(st["snapshot_version"]),
+        "n_updates": n_updates,
+        "sched_refreshes": int(rs["sched_refreshes"]),
+        "forced_refreshes": int(st["n_forced_refresh"]),
+    }
+
+
 def _bench_setup(smoke: bool, seed: int):
     """Shared sizes/graph/configs for the main and sharded variant sets
     (identical sizes keep 1-device and @Ndev rows comparable)."""
@@ -211,6 +283,9 @@ def run(smoke: bool = True, seed: int = 0) -> List[Dict]:
     rows.append(run_inference_variant(graph, cfg, seed=seed, repeats=3))
     rows.append(run_inference_variant(graph, kcfg, seed=seed, repeats=1,
                                       serve_requests=32))
+    # serving under a concurrent write stream (qps/p99/staleness —
+    # recorded, not gated, like the other inference cells)
+    rows.append(run_serve_writes_variant(graph, cfg, seed=seed))
     return rows
 
 

@@ -70,6 +70,7 @@ AUDITED_MODULES = (
     "core/serving.py",
     "core/featcache.py",
     "core/inference.py",
+    "core/embedding_store.py",
 )
 
 

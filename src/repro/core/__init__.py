@@ -13,6 +13,8 @@ from repro.core.engine import (  # noqa: F401
 from repro.core.experiment import run_experiment, sweep, save_rows  # noqa: F401
 from repro.core.inference import (  # noqa: F401
     InferenceRun, layerwise_embeddings, layerwise_layers, layerwise_logits)
-from repro.core.embedding_store import EmbeddingStore  # noqa: F401
-from repro.core.serving import GNNServer, ServeStats  # noqa: F401
+from repro.core.embedding_store import EmbeddingStore, TableSnapshot  # noqa: F401
+from repro.core.serving import (  # noqa: F401
+    GNNServer, ServeStats, ServedAnswer, ServerOverloadedError,
+    DeadlineExceededError)
 from repro.core import faults, theory, metrics, wasserstein  # noqa: F401

@@ -83,7 +83,11 @@ def inference_metrics(graph: Graph, cfg: GNNConfig, params, *,
     8-node queries through ``GNNServer`` (``serve_p50_ms`` /
     ``serve_p99_ms`` / ``serve_qps``) and scores the cached final-layer
     logits on the test split (``serve_acc`` — full-neighborhood
-    inference accuracy, the §4.1 evaluation protocol)."""
+    inference accuracy, the §4.1 evaluation protocol).  PR 10 adds the
+    serving SLO columns next to the latency percentiles: the snapshot
+    version answered from, the max served staleness, and the
+    shed/forced-refresh counts (all zero in this write-free axis —
+    nonzero only under the serve-under-writes benchmark)."""
     from repro.core.embedding_store import EmbeddingStore
     from repro.core.serving import GNNServer
 
@@ -111,6 +115,10 @@ def inference_metrics(graph: Graph, cfg: GNNConfig, params, *,
         "serve_p99_ms": round(st["p99_ms"], 4),
         "serve_qps": round(st["qps"], 1),
         "serve_acc": round(acc, 6),
+        "serve_snapshot_version": int(st["snapshot_version"]),
+        "serve_staleness_max_s": round(st["staleness_max_s"], 4),
+        "serve_shed": int(st["n_shed"]),
+        "serve_forced_refresh": int(st["n_forced_refresh"]),
     }
 
 

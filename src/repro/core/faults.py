@@ -57,6 +57,12 @@ class FatalSamplerFault(RuntimeError):
     re-raised on every subsequent ``next()``."""
 
 
+class TransientRefreshFault(TransientSamplerFault):
+    """A serving-side refresh error classified as TRANSIENT: the
+    embedding store's ``refresh_with_recovery`` retries it with
+    exponential backoff (same transient/fatal split as the sampler)."""
+
+
 # ---------------------------------------------------------------------------
 # Failpoints
 # ---------------------------------------------------------------------------

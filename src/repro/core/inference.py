@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GNNConfig
+from repro.core import faults
 from repro.core import gnn as G
 from repro.core.engine import _static_cfg
 from repro.core.graph import Graph, to_ell
@@ -320,6 +321,7 @@ def _featshard_run(params, scfg: GNNConfig, feats, ell,
         # returned table is trimmed to the real rows
         layers.append(h[:n] if pad else h)
         per_layer.append(round(time.perf_counter() - lt0, 6))
+        faults.maybe_crash("infer.after_layer")
     total = time.perf_counter() - t0
     d = feats.shape[1]
     item = 2 if scfg.dtype == "bfloat16" else np.dtype(feats.dtype).itemsize
@@ -386,6 +388,7 @@ def layerwise_layers(params, cfg: GNNConfig, feats,
             jax.block_until_ready(h)
             layers.append(h)
             per_layer.append(round(time.perf_counter() - lt0, 6))
+            faults.maybe_crash("infer.after_layer")
     finally:
         stream.close()
     total = time.perf_counter() - t0

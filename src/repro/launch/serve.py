@@ -11,8 +11,14 @@ embedding pass, CHECKS it per-layer against the naive full-graph
 forward, answers N micro-batched queries (from concurrent client
 threads), verifies every answer against the direct forward argmax,
 then mutates a few node features and re-serves through the incremental
-re-embed path — exercising the whole tier end to end.  Exit is nonzero
-on any mismatch.
+re-embed path — exercising the whole tier end to end.  A write-load
+phase follows (PR 10): a writer thread streams feature updates through
+the WAL while concurrent clients query, with one injected
+mid-refresh crash (``store.mid_layer_refresh``) killing the background
+refresh scheduler — answers must keep coming from the last consistent
+snapshot; then a tight ``max_staleness_s`` SLO forces a synchronous
+refresh and the served answers must match the fully updated forward.
+Exit is nonzero on any mismatch.
 
 Decoder families keep the prefill/decode-step driver:
 
@@ -104,7 +110,91 @@ def serve_gnn(args, cfg) -> int:
     update_ok = np.array_equal(store.predict(check), post_expect[check])
     incremental = 0 < refresh["total_rows"] < graph.n * cfg.n_layers
 
-    ok = layers_ok and serve_ok and counters_ok and update_ok
+    # ---- write-load phase A: concurrent writer + queries + one
+    # injected mid-refresh crash.  The scheduler thread dies on its
+    # first re-embed attempt, so NO new version can be published —
+    # every concurrent answer must come from the last consistent
+    # snapshot (the pre-phase state), byte-for-byte.
+    import threading
+
+    from repro.core import faults
+
+    v0 = store.version
+    old_hook = threading.excepthook
+    threading.excepthook = lambda a: None     # the injected crash is loud
+    wserver = GNNServer(store, max_batch=args.max_batch,
+                        max_wait_ms=args.max_wait_ms,
+                        max_staleness_s=30.0,      # loose: scheduler owns
+                        refresh_every_updates=4)   # the refresh cadence
+    try:
+        faults.arm("store.mid_layer_refresh", at_hits=(0,))
+
+        def _writer():
+            w_rng = np.random.default_rng(args.seed + 2)
+            for _ in range(8):
+                nodes = w_rng.choice(graph.n, size=2, replace=False)
+                store.update_features(
+                    nodes, w_rng.normal(size=(2, graph.feats.shape[1]))
+                    .astype(np.float32))
+                time.sleep(0.003)
+
+        wt = threading.Thread(target=_writer)
+        wt.start()
+        wqueries = [rng.integers(0, graph.n, size=8) for _ in range(32)]
+        with ThreadPoolExecutor(max_workers=args.concurrency) as pool:
+            wanswers = list(pool.map(
+                lambda q: wserver.submit(q, with_meta=True)
+                .result(timeout=60.0), wqueries))
+        wt.join(timeout=60.0)
+        sched = store._sched_thread
+        if sched is not None:
+            sched.join(timeout=30.0)          # killed by the failpoint
+    finally:
+        faults.disarm()
+        wserver.close()
+        threading.excepthook = old_hook
+    chaos_ok = (store.version == v0 and store.dirty
+                and all(a.snapshot_version == v0
+                        and np.array_equal(a.preds, post_expect[q])
+                        for a, q in zip(wanswers, wqueries)))
+
+    # recovery: a manual refresh catches up on everything the crashed
+    # scheduler left in the WAL/dirty masks
+    store.refresh()
+    rec_logits = G.full_graph_forward(
+        params, cfg, jnp.asarray(store.graph.feats), jnp.asarray(store.idx),
+        jnp.asarray(store.w), jnp.asarray(store.w_self))
+    rec_expect = np.argmax(np.asarray(rec_logits), -1)
+    recovery_ok = (store.version == v0 + 1 and not store.dirty
+                   and np.array_equal(store.predict_meta(check)[0],
+                                      rec_expect[check]))
+
+    # ---- write-load phase B: hard staleness SLO — aged updates force
+    # a synchronous refresh on the serve path, so the answer is fresh
+    slo_server = GNNServer(store, max_batch=args.max_batch,
+                           max_wait_ms=args.max_wait_ms,
+                           max_staleness_s=0.05)
+    try:
+        upd2 = rng.choice(graph.n, size=4, replace=False)
+        store.update_features(
+            upd2, rng.normal(size=(4, graph.feats.shape[1]))
+            .astype(np.float32))
+        time.sleep(0.1)                       # age past the bound
+        ans = slo_server.submit(check, with_meta=True).result(timeout=60.0)
+        slo_stats = slo_server.stats()
+    finally:
+        slo_server.close()
+    slo_logits = G.full_graph_forward(
+        params, cfg, jnp.asarray(store.graph.feats), jnp.asarray(store.idx),
+        jnp.asarray(store.w), jnp.asarray(store.w_self))
+    slo_expect = np.argmax(np.asarray(slo_logits), -1)
+    slo_ok = (ans.staleness_s <= 0.05
+              and ans.snapshot_version == store.version
+              and slo_stats["n_forced_refresh"] >= 1
+              and np.array_equal(ans.preds, slo_expect[check]))
+
+    ok = (layers_ok and serve_ok and counters_ok and update_ok
+          and chaos_ok and recovery_ok and slo_ok)
     print(json.dumps({
         "arch": args.arch, "family": "gnn", "model": cfg.model,
         "n_nodes": graph.n, "n_layers": cfg.n_layers,
@@ -119,6 +209,15 @@ def serve_gnn(args, cfg) -> int:
         "update_reembedded_rows": refresh["total_rows"],
         "update_incremental": incremental,
         "post_update_answers_match_forward": update_ok,
+        "write_phase": {
+            "chaos_answers": len(wanswers),
+            "chaos_served_version": int(v0),
+            "chaos_old_snapshot_consistent": chaos_ok,
+            "recovery_refresh_consistent": recovery_ok,
+            "slo_forced_refreshes": int(slo_stats["n_forced_refresh"]),
+            "slo_staleness_s": round(float(ans.staleness_s), 4),
+            "slo_fresh_and_consistent": slo_ok,
+        },
         "ok": ok,
     }, indent=2))
     return 0 if ok else 1

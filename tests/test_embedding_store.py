@@ -166,6 +166,52 @@ def test_query_autorefresh_and_predict(small_graph):
         logits, np.asarray(store.layers[-1])[[5, 3]], rtol=1e-6)
 
 
+def test_wal_pending_updates_and_staleness(small_graph):
+    """PR 10: writers append to the WAL; ``pending_updates`` /
+    ``staleness_s`` track what the serving snapshot does not reflect
+    yet, and a successful refresh zeroes both."""
+    g = _copy_graph(small_graph)
+    cfg = _cfg(g)
+    params = G.init_gnn(jax.random.key(10), cfg, g.feats.shape[1])
+    store = _store(g, cfg, params)
+    assert store.version == 1
+    assert store.pending_updates() == 0
+    assert store.staleness_s() == 0.0
+    rng = np.random.default_rng(10)
+    store.update_features([1], rng.normal(size=(1, g.feats.shape[1]))
+                          .astype(np.float32))
+    store.mark_dirty([2])
+    assert store.pending_updates() == 2
+    assert store.staleness_s() > 0.0
+    store.refresh()
+    assert store.version == 2
+    assert store.pending_updates() == 0
+    assert store.staleness_s() == 0.0
+    _assert_matches_fresh(store, params, cfg)
+
+
+def test_predict_meta_serves_stale_without_refresh(small_graph):
+    """``predict_meta`` answers from the current snapshot and reports
+    its version + staleness; only ``predict``/``query_logits`` keep the
+    PR-7 auto-refresh behavior."""
+    g = _copy_graph(small_graph)
+    cfg = _cfg(g)
+    params = G.init_gnn(jax.random.key(11), cfg, g.feats.shape[1])
+    store = _store(g, cfg, params)
+    before = np.argmax(store.snapshot().final_np, -1)
+    rng = np.random.default_rng(11)
+    store.update_features(np.arange(8),
+                          rng.normal(size=(8, g.feats.shape[1]))
+                          .astype(np.float32))
+    preds, ver, stale = store.predict_meta(np.arange(g.n))
+    assert ver == 1 and stale > 0.0
+    assert np.array_equal(preds, before)     # old version, NOT refreshed
+    assert store.dirty
+    store.predict([0])                       # auto-refreshes
+    assert not store.dirty
+    assert store.predict_meta([0])[1] == 2
+
+
 def test_capped_max_deg_store(small_graph):
     """A degree-capped store stays consistent with a capped fresh
     rebuild through updates (truncated ELL is the documented layout)."""

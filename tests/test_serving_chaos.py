@@ -1,0 +1,477 @@
+"""Write-safe serving under chaos (PR 10).
+
+The snapshot-consistency property: with writers streaming
+``update_features``/``add_edges`` and failpoints armed at every new
+serving/store failpoint, no query ever observes a torn or partially
+refreshed table — every served prediction equals a full recompute at
+SOME consistent snapshot version (a prefix of the applied update
+sequence), and a server with ``max_staleness_s`` set never answers
+from a snapshot older than the bound.
+
+Runs in tier-1 AND under ``make chaos`` (Makefile wires this file into
+the chaos target next to the checkpoint/resume crash tests)."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GNNConfig
+from repro.core import faults
+from repro.core import gnn as G
+from repro.core.embedding_store import EmbeddingStore
+from repro.core.graph import to_ell
+from repro.core.serving import (DeadlineExceededError, GNNServer,
+                                ServedAnswer, ServerOverloadedError,
+                                ServeStats, _Reservoir)
+
+
+@pytest.fixture(autouse=True)
+def _no_armed_failpoints():
+    yield
+    faults.disarm()
+
+
+@pytest.fixture(autouse=True)
+def _quiet_thread_crashes(monkeypatch):
+    """Injected SimulatedCrash kills daemon threads by design; keep the
+    default excepthook traceback out of the test output."""
+    monkeypatch.setattr(threading, "excepthook", lambda args: None)
+
+
+def _cfg(g, **kw):
+    base = dict(name="chaos-srv", model="graphsage", n_nodes=g.n,
+                feat_dim=g.feats.shape[1], hidden=8,
+                n_classes=g.n_classes, n_layers=2, fanout=(4, 3),
+                batch_size=32, loss="ce")
+    base.update(kw)
+    return GNNConfig(**base)
+
+
+def _copy_graph(g):
+    import dataclasses
+    return dataclasses.replace(g, feats=g.feats.copy(),
+                               indptr=g.indptr.copy(),
+                               indices=g.indices.copy())
+
+
+def _built(small_graph, key=0):
+    g = _copy_graph(small_graph)
+    cfg = _cfg(g)
+    params = G.init_gnn(jax.random.key(key), cfg, g.feats.shape[1])
+    store = EmbeddingStore(params, cfg, g, chunk_size=64)
+    store.build()
+    return store, params, cfg
+
+
+def _forward_argmax(store, params, cfg, feats=None):
+    idx, w, ws = to_ell(store.graph)
+    logits = G.full_graph_forward(
+        params, cfg,
+        jnp.asarray(store.graph.feats if feats is None else feats),
+        jnp.asarray(idx), jnp.asarray(w), jnp.asarray(ws))
+    return np.argmax(np.asarray(logits), -1)
+
+
+# ---------------------------------------------------------------------------
+# versioned snapshots: crashes mid-refresh never tear the serving state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fp", ["store.mid_layer_refresh",
+                                "store.before_swap"])
+def test_crash_mid_refresh_keeps_old_snapshot(small_graph, fp):
+    store, params, cfg = _built(small_graph, key=0)
+    snap0 = store.snapshot()
+    final0 = snap0.final_np.copy()
+    rng = np.random.default_rng(0)
+    store.update_features([3, 9], rng.normal(size=(2, 16))
+                          .astype(np.float32))
+    with faults.armed(fp):
+        with pytest.raises(faults.SimulatedCrash):
+            store.refresh()
+    # partial version discarded: same snapshot object, same version,
+    # byte-identical final table, dirty info intact
+    assert store.snapshot() is snap0
+    assert store.version == snap0.version
+    np.testing.assert_array_equal(store.snapshot().final_np, final0)
+    assert store.dirty
+    # queries keep answering from the old consistent version
+    preds, ver, _ = store.predict_meta(np.arange(store.graph.n))
+    assert ver == snap0.version
+    np.testing.assert_array_equal(preds, np.argmax(final0, -1))
+    # the WAL/dirty masks were NOT lost: the retry catches up exactly
+    store.refresh()
+    assert store.version == snap0.version + 1 and not store.dirty
+    np.testing.assert_array_equal(store.predict_meta([0])[0],
+                                  _forward_argmax(store, params, cfg)[:1])
+
+
+def test_snapshot_immutable_across_versions(small_graph):
+    store, params, cfg = _built(small_graph, key=1)
+    snap1 = store.snapshot()
+    final1 = snap1.final_np.copy()
+    rng = np.random.default_rng(1)
+    store.update_features(np.arange(10),
+                          rng.normal(size=(10, 16)).astype(np.float32))
+    store.refresh()
+    snap2 = store.snapshot()
+    assert snap2.version == snap1.version + 1
+    assert snap2 is not snap1
+    # the old snapshot a reader may still hold is untouched
+    np.testing.assert_array_equal(snap1.final_np, final1)
+    with pytest.raises(Exception):            # frozen dataclass
+        snap2.version = 99
+
+
+def test_transient_refresh_fault_retried(small_graph):
+    store, params, cfg = _built(small_graph, key=2)
+    rng = np.random.default_rng(2)
+    store.update_features([5], rng.normal(size=(1, 16))
+                          .astype(np.float32))
+    with faults.armed("store.mid_layer_refresh", at_hits=(0,),
+                      exc=faults.TransientRefreshFault):
+        info = store.refresh_with_recovery(max_retries=2,
+                                           backoff_s=0.001)
+    assert info["total_rows"] > 0 and "degraded" not in info
+    assert store.refresh_stats()["transient_retries"] == 1
+    assert not store.dirty
+    np.testing.assert_array_equal(store.predict_meta(np.arange(20))[0],
+                                  _forward_argmax(store, params, cfg)[:20])
+
+
+def test_fatal_refresh_degrades_to_one_full_build(small_graph):
+    store, params, cfg = _built(small_graph, key=3)
+    rng = np.random.default_rng(3)
+    store.update_features([4], rng.normal(size=(1, 16))
+                          .astype(np.float32))
+    with faults.armed("store.mid_layer_refresh", at_hits=(0,),
+                      exc=faults.FatalSamplerFault):
+        with pytest.warns(RuntimeWarning, match="DEGRADING"):
+            info = store.refresh_with_recovery(max_retries=1,
+                                               backoff_s=0.001)
+    assert info.get("degraded") is True
+    st = store.refresh_stats()
+    assert st["degraded_builds"] == 1 and not store.dirty
+    np.testing.assert_array_equal(store.predict_meta(np.arange(20))[0],
+                                  _forward_argmax(store, params, cfg)[:20])
+
+
+def test_fatal_after_degrade_surfaces_and_server_closes(small_graph):
+    """before_swap armed at hits {0, 1}: the incremental publish dies,
+    the degrade-to-build publish dies too → the fault surfaces on the
+    query futures; the server stays closeable and the old snapshot is
+    still the serving state."""
+    store, params, cfg = _built(small_graph, key=4)
+    v0 = store.version
+    rng = np.random.default_rng(4)
+    server = GNNServer(store, max_batch=8, max_wait_ms=1.0)
+    try:
+        server.classify([0, 1])
+        store.update_features([7], rng.normal(size=(1, 16))
+                              .astype(np.float32))
+        with faults.armed("store.before_swap", at_hits=(0, 1),
+                          exc=faults.FatalSamplerFault):
+            fut = server.submit([2, 3])
+            with pytest.warns(RuntimeWarning, match="DEGRADING"):
+                with pytest.raises(faults.FatalSamplerFault):
+                    fut.result(timeout=30.0)
+        assert store.version == v0          # both partial versions dropped
+    finally:
+        server.close()
+    assert np.array_equal(store.predict_meta([2, 3])[0],
+                          np.argmax(store.snapshot().final_np[[2, 3]], -1))
+
+
+def test_serve_before_reply_failpoint(small_graph):
+    store, params, cfg = _built(small_graph, key=5)
+    expect = _forward_argmax(store, params, cfg)
+    with GNNServer(store, max_batch=4, max_wait_ms=1.0) as server:
+        with faults.armed("serve.before_reply", at_hits=(0,)):
+            with pytest.raises(faults.SimulatedCrash):
+                server.classify([1, 2])
+        # next batch is healthy — the failed reply never leaked state
+        assert np.array_equal(server.classify([1, 2]), expect[[1, 2]])
+
+
+def test_scheduler_thread_killed_by_crash_old_snapshot_serves(small_graph):
+    store, params, cfg = _built(small_graph, key=6)
+    v0 = store.version
+    final0 = store.snapshot().final_np.copy()
+    rng = np.random.default_rng(6)
+    store.start_scheduler(refresh_every_updates=1, refresh_budget_ms=None,
+                          tick_s=0.002)
+    try:
+        with faults.armed("store.mid_layer_refresh", at_hits=(0,)):
+            store.update_features([11], rng.normal(size=(1, 16))
+                                  .astype(np.float32))
+            t = store._sched_thread
+            t.join(timeout=10.0)            # SimulatedCrash kills it
+            assert not t.is_alive()
+        assert store.version == v0 and store.dirty
+        np.testing.assert_array_equal(store.snapshot().final_np, final0)
+    finally:
+        store.stop_scheduler()
+    store.refresh()                          # recovery after "restart"
+    np.testing.assert_array_equal(store.predict_meta(np.arange(30))[0],
+                                  _forward_argmax(store, params, cfg)[:30])
+
+
+def test_scheduler_background_refresh_converges(small_graph):
+    store, params, cfg = _built(small_graph, key=7)
+    rng = np.random.default_rng(7)
+    store.start_scheduler(refresh_every_updates=2, refresh_budget_ms=5.0,
+                          tick_s=0.002)
+    try:
+        store.update_features(np.arange(4),
+                              rng.normal(size=(4, 16)).astype(np.float32))
+        deadline = time.monotonic() + 20.0
+        while store.dirty and time.monotonic() < deadline:
+            time.sleep(0.005)
+    finally:
+        store.stop_scheduler()
+    assert not store.dirty
+    st = store.refresh_stats()
+    assert st["sched_refreshes"] >= 1 and st["pending_updates"] == 0
+    np.testing.assert_array_equal(store.predict_meta(np.arange(30))[0],
+                                  _forward_argmax(store, params, cfg)[:30])
+
+
+# ---------------------------------------------------------------------------
+# staleness SLO
+# ---------------------------------------------------------------------------
+
+def test_max_staleness_forces_synchronous_refresh(small_graph):
+    store, params, cfg = _built(small_graph, key=8)
+    rng = np.random.default_rng(8)
+    with GNNServer(store, max_batch=8, max_wait_ms=1.0,
+                   max_staleness_s=0.05) as server:
+        server.classify([0])
+        store.update_features([6], rng.normal(size=(1, 16))
+                              .astype(np.float32))
+        time.sleep(0.1)                      # age past the bound
+        ans = server.submit([6, 7], with_meta=True).result(timeout=30.0)
+        assert isinstance(ans, ServedAnswer)
+        # the hard SLO: the breach forced a refresh, so the answer is
+        # fresh, from the NEW version
+        assert ans.staleness_s <= 0.05
+        assert ans.snapshot_version == 2
+        assert server.stats()["n_forced_refresh"] >= 1
+    assert np.array_equal(ans.preds,
+                          _forward_argmax(store, params, cfg)[[6, 7]])
+
+
+def test_max_staleness_none_serves_stale(small_graph):
+    store, params, cfg = _built(small_graph, key=9)
+    before = _forward_argmax(store, params, cfg)
+    rng = np.random.default_rng(9)
+    with GNNServer(store, max_batch=8, max_wait_ms=1.0,
+                   max_staleness_s=None) as server:
+        store.update_features([2], rng.normal(size=(1, 16))
+                              .astype(np.float32))
+        time.sleep(0.02)
+        ans = server.submit([2], with_meta=True).result(timeout=30.0)
+        # no refresh on the serve path: old version, staleness reported
+        assert ans.snapshot_version == 1
+        assert ans.staleness_s > 0.0
+        assert np.array_equal(ans.preds, before[[2]])
+        assert server.stats()["n_forced_refresh"] == 0
+    assert store.dirty                       # still pending
+
+
+# ---------------------------------------------------------------------------
+# overload protection
+# ---------------------------------------------------------------------------
+
+def test_overload_fail_fast(small_graph):
+    store, params, cfg = _built(small_graph, key=10)
+    server = GNNServer(store, max_batch=4, queue_depth=2,
+                       overload="fail", start=False)
+    futs = [server.submit([i]) for i in range(2)]
+    with pytest.raises(ServerOverloadedError):
+        server.submit([2])
+    assert server.stats()["n_overload"] == 1
+    server.start()
+    try:
+        for i, f in enumerate(futs):
+            assert f.result(timeout=30.0)[0] == \
+                _forward_argmax(store, params, cfg)[i]
+    finally:
+        server.close()
+
+
+def test_overload_block_times_out(small_graph):
+    store, params, cfg = _built(small_graph, key=11)
+    server = GNNServer(store, queue_depth=1, overload="block",
+                       submit_timeout_s=0.05, start=False)
+    f0 = server.submit([0])
+    t0 = time.monotonic()
+    with pytest.raises(ServerOverloadedError):
+        server.submit([1])
+    assert time.monotonic() - t0 >= 0.04     # blocked, then failed
+    server.close()
+    with pytest.raises(RuntimeError, match="server closed"):
+        f0.result(timeout=5.0)
+
+
+def test_deadline_shed_before_lookup(small_graph):
+    store, params, cfg = _built(small_graph, key=12)
+    server = GNNServer(store, max_batch=8, max_wait_ms=1.0, start=False)
+    expired = server.submit([0], deadline_s=0.01)
+    live = server.submit([1])
+    time.sleep(0.05)
+    server.start()
+    try:
+        with pytest.raises(DeadlineExceededError):
+            expired.result(timeout=30.0)
+        assert live.result(timeout=30.0)[0] == \
+            _forward_argmax(store, params, cfg)[1]
+        assert server.stats()["n_shed"] == 1
+    finally:
+        server.close()
+
+
+def test_close_drains_queue_and_fails_futures(small_graph):
+    store, params, cfg = _built(small_graph, key=13)
+    server = GNNServer(store, start=False)
+    futs = [server.submit([i]) for i in range(3)]
+    server.close()
+    for f in futs:
+        with pytest.raises(RuntimeError, match="server closed"):
+            f.result(timeout=5.0)
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit([0])
+    server.close()                            # idempotent
+
+
+# ---------------------------------------------------------------------------
+# bounded stats
+# ---------------------------------------------------------------------------
+
+def test_reservoir_bounds_latency_memory():
+    r = _Reservoir(cap=16, seed=0)
+    for i in range(1000):
+        r.add(float(i))
+    assert r.n == 1000 and len(r.values()) == 16
+    # uniform sample: spans the stream, not just the head
+    assert r.values().max() > 500
+
+    stats = ServeStats(reservoir=8)
+    for b in range(50):
+        stats.record(1, 4, [1.0, 2.0, 3.0, 4.0], 0.0, 1.0,
+                     version=b, staleness_s=0.01 * b)
+    snap = stats.snapshot()
+    assert len(stats._lat._buf) == 8          # bounded under traffic
+    for key in ("n_requests", "n_queries", "n_batches",
+                "mean_batch_queries", "p50_ms", "p99_ms", "mean_ms",
+                "qps", "snapshot_version", "staleness_last_s",
+                "staleness_max_s", "n_shed", "n_overload",
+                "n_forced_refresh"):
+        assert key in snap, key
+    assert snap["n_requests"] == 50 and snap["snapshot_version"] == 49
+    assert snap["staleness_max_s"] == pytest.approx(0.49)
+
+
+# ---------------------------------------------------------------------------
+# the headline property: concurrent writers vs queries
+# ---------------------------------------------------------------------------
+
+def _oracle_versions(small_graph, updates, key):
+    """March a shadow store through the same update sequence; the
+    consistent states a correct server may answer from are exactly the
+    prefixes: argmax tables P_0 (initial) .. P_K (all applied)."""
+    store, params, cfg = _built(small_graph, key=key)
+    tables = [np.argmax(store.snapshot().final_np, -1)]
+    for kind, a, b in updates:
+        if kind == "feats":
+            store.update_features(a, b)
+        else:
+            store.add_edges(a, b)
+        store.refresh()
+        tables.append(np.argmax(store.snapshot().final_np, -1))
+    return tables
+
+
+def _update_stream(n, feat_dim, rng):
+    updates = []
+    for i in range(6):
+        if i % 3 == 2:                        # every third is structural
+            src = rng.choice(n, size=2, replace=False)
+            dst = rng.choice(n, size=2, replace=False)
+            updates.append(("edges", src, dst))
+        else:
+            nodes = rng.choice(n, size=4, replace=False)
+            feats = rng.normal(size=(4, feat_dim)).astype(np.float32)
+            updates.append(("feats", nodes, feats))
+    return updates
+
+
+def test_concurrent_writers_vs_queries_prefix_consistent(small_graph):
+    """Writer streaming feature AND edge updates while two query
+    threads hammer classify: no crash, and every answer equals SOME
+    prefix-consistent version's full recompute."""
+    rng = np.random.default_rng(42)
+    updates = _update_stream(small_graph.n, 16, rng)
+    tables = _oracle_versions(small_graph, updates, key=20)
+
+    store, params, cfg = _built(small_graph, key=20)
+    qnodes = np.arange(0, small_graph.n, 7)   # fixed probe set
+    answers, errors = [], []
+    stop = threading.Event()
+
+    server = GNNServer(store, max_batch=32, max_wait_ms=0.5,
+                       max_staleness_s=0.25,
+                       refresh_every_updates=2, refresh_budget_ms=20.0)
+    try:
+        def writer():
+            try:
+                for kind, a, b in updates:
+                    if kind == "feats":
+                        store.update_features(a, b)
+                    else:
+                        store.add_edges(a, b)
+                    time.sleep(0.02)
+            except Exception as e:            # pragma: no cover
+                errors.append(e)
+            finally:
+                stop.set()
+
+        def querier():
+            try:
+                while not stop.is_set() or len(answers) < 3:
+                    ans = server.submit(qnodes, with_meta=True
+                                        ).result(timeout=30.0)
+                    answers.append(ans)
+                    if len(answers) > 400:
+                        break
+            except Exception as e:            # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer)] + \
+            [threading.Thread(target=querier) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120.0)
+        # let the scheduler catch up, then one final query must match
+        # the FULLY applied state
+        deadline = time.monotonic() + 20.0
+        while store.dirty and time.monotonic() < deadline:
+            time.sleep(0.01)
+        final = server.classify(qnodes)
+    finally:
+        server.close()
+
+    assert not errors, errors
+    assert len(answers) >= 3
+    want = [t[qnodes] for t in tables]
+    for ans in answers:
+        assert any(np.array_equal(ans.preds, w) for w in want), \
+            "answer matches NO consistent version (torn snapshot?)"
+        assert ans.staleness_s <= 0.25 + 0.2  # SLO + scheduling slack
+    np.testing.assert_array_equal(final, want[-1])
+    # and the incremental end-state equals a from-scratch recompute
+    np.testing.assert_array_equal(
+        np.argmax(store.snapshot().final_np, -1),
+        _forward_argmax(store, params, cfg))
